@@ -1,0 +1,84 @@
+"""Shared benchmark infrastructure: trace cache, scheme grids, aggregates."""
+from __future__ import annotations
+
+import math
+import os
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.params import NetworkParams
+from repro.sim.desim import SimConfig, make_net, simulate_grid
+from repro.sim.schemes import SCHEMES, with_ratio
+from repro.sim.trace import Trace, generate_trace, merge_traces
+from repro.sim.workloads import ORDER, WORKLOADS
+
+CACHE = Path(__file__).resolve().parent / "_cache"
+CACHE.mkdir(exist_ok=True)
+
+# default trace length; override with REPRO_BENCH_R (quick CI runs use less)
+TRACE_R = int(os.environ.get("REPRO_BENCH_R", "60000"))
+
+# the paper's network grid: switch latency {100,400}ns x bw factor {2,4,8}
+NETWORK_GRID = [(sw, bf) for sw in (100.0, 400.0) for bf in (2.0, 4.0, 8.0)]
+
+
+def get_trace(wl: str, r: int = None, seed: int = 1) -> Trace:
+    r = r or TRACE_R
+    w = WORKLOADS[wl]
+    key = CACHE / f"{wl}_{r}_{seed}.npz"
+    if key.exists():
+        z = np.load(key)
+        return Trace(z["page"], z["off"], z["gap"], z["wr"],
+                     int(z["n_pages"]))
+    t = generate_trace(w, r, seed)
+    np.savez(key, page=t.page, off=t.off, gap=t.gap, wr=t.wr,
+             n_pages=t.n_pages)
+    return t
+
+
+def nets_for(pairs) -> list:
+    return [make_net(NetworkParams(bw_factor=bf, switch_latency_ns=sw))
+            for sw, bf in pairs]
+
+
+def run_grid(workloads, scheme_names, net_pairs, r=None,
+             cfg: SimConfig = None, ratio=None):
+    """-> {wl: {scheme: [metrics per net]}} over the given grid."""
+    cfg = cfg or SimConfig()
+    nets = nets_for(net_pairs)
+    out = {}
+    for wl in workloads:
+        tr = get_trace(wl, r)
+        w = WORKLOADS[wl]
+        out[wl] = {}
+        for s in scheme_names:
+            flags = SCHEMES[s]
+            if ratio is not None and s in ("bp", "pq", "daemon"):
+                flags = with_ratio(flags, ratio)
+            out[wl][s] = simulate_grid(flags, cfg, tr, nets, w.comp_ratio)
+    return out
+
+
+def geomean(xs):
+    xs = [max(x, 1e-12) for x in xs]
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+def speedup_table(grid, base="remote", metric="total_time_ns"):
+    """-> {wl: {scheme: [speedup per net]}} (base/scheme ratios)."""
+    out = {}
+    for wl, per in grid.items():
+        out[wl] = {}
+        for s, rows in per.items():
+            out[wl][s] = [per[base][i][metric] / rows[i][metric]
+                          for i in range(len(rows))]
+    return out
+
+
+def csv_print(title, header, rows):
+    print(f"# {title}")
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    print()

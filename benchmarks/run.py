@@ -1,0 +1,87 @@
+"""Benchmark aggregator: one function per paper table/figure + roofline.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig8,...]
+Emits CSV blocks per figure and the paper-claim validation summary.
+Trace length via REPRO_BENCH_R (default 60000).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks import figures, roofline
+from benchmarks.common import ORDER
+from benchmarks.validate import check
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="short traces (20k) for CI")
+    ap.add_argument("--only", default="",
+                    help="comma list: fig3,fig8,fig9,... roofline")
+    args = ap.parse_args()
+    r = 20000 if args.quick else None
+    only = set(filter(None, args.only.split(",")))
+
+    def want(name):
+        return not only or name in only
+
+    t0 = time.time()
+    values = {}
+
+    if want("fig3"):
+        f3 = figures.fig3_motivation(r)
+        values["remote_slowdown_vs_local"] = 1.0 / f3["agg"]["local"] \
+            if f3["agg"]["local"] < 1 else f3["agg"]["local"]
+    f8 = None
+    if want("fig8"):
+        f8 = figures.fig8_speedup(r)
+        values["daemon_speedup_avg"] = f8["agg"]["daemon"]
+        values["daemon_bw2"] = f8["by_bw"][2.0]
+        values["daemon_bw4"] = f8["by_bw"][4.0]
+        values["daemon_bw8"] = f8["by_bw"][8.0]
+    if want("fig9"):
+        f9 = figures.fig9_access_cost(r, grid=f8["grid"] if f8 else None)
+        values["daemon_access_cost_avg"] = f9["agg"]["daemon"]
+        values["lc_access_cost_avg"] = f9["agg"]["lc"]
+        values["pq_access_cost_avg"] = f9["agg"]["pq"]
+    if want("fig10"):
+        f10 = figures.fig10_hit_ratio(r)
+        values["remote_hit_ratio_avg"] = f10["avg"]["remote"]
+        values["daemon_hit_delta_vs_remote"] = (f10["avg"]["remote"]
+                                                - f10["avg"]["daemon"])
+    if want("fig11"):
+        f11 = figures.fig11_bw_ratio(r)
+        values["ratio25_beats_50"] = f11["agg"][0.25] / max(
+            f11["agg"][0.50], 1e-9)
+    if want("fig12"):
+        f12 = figures.fig12_compression(r)
+        values["lz_vs_fpcbdi"] = f12["agg"]["lz"] / f12["agg"]["fpcbdi"]
+        values["lz_vs_fve"] = f12["agg"]["lz"] / f12["agg"]["fve"]
+    if want("fig13"):
+        figures.fig13_disturbance(r)
+    if want("fig15"):
+        figures.fig15_multithreaded(r)
+    if want("fig16"):
+        figures.fig16_fifo(r)
+    if want("fig17"):
+        figures.fig17_multi_mc(r)
+    if want("fig18"):
+        figures.fig18_multi_workload(r)
+    if want("fig20"):
+        figures.fig20_switch_latency(r)
+    if want("fig21"):
+        figures.fig21_bw_factor(r)
+    if want("roofline"):
+        roofline.main()
+
+    if values:
+        check(values)
+    print(f"# total wall time: {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Validate reproduction aggregates against the paper's own claims.
+
+Each claim: (name, paper value, ours, tolerance band). Bands are generous —
+a request-level DES cannot match a cycle-accurate Sniper point-for-point;
+the bar is: same ordering, same regimes, headline aggregates in range.
+"""
+from __future__ import annotations
+
+CLAIMS = [
+    # (name, paper, lo, hi)  -> value filled by the driver
+    ("daemon_speedup_avg", 2.39, 1.35, 3.4),
+    ("daemon_access_cost_avg", 3.06, 1.5, 4.5),
+    ("lc_access_cost_avg", 2.12, 1.3, 3.2),
+    ("pq_access_cost_avg", 2.06, 0.85, 3.2),
+    ("remote_slowdown_vs_local", 3.86, 1.7, 6.0),
+    ("remote_hit_ratio_avg", 0.977, 0.90, 1.0),
+    ("daemon_hit_delta_vs_remote", 0.004, -0.01, 0.08),
+    ("daemon_bw2", 1.85, 1.05, 2.8),
+    ("daemon_bw4", 2.36, 1.3, 3.4),
+    ("daemon_bw8", 2.97, 1.6, 4.4),
+    ("ratio25_beats_50", 1.02, 0.98, 1.6),
+    ("lz_vs_fpcbdi", 1.54, 1.1, 2.2),
+    ("lz_vs_fve", 1.44, 1.05, 2.1),
+]
+
+
+def check(values: dict):
+    rows = []
+    ok_all = True
+    for name, paper, lo, hi in CLAIMS:
+        v = values.get(name)
+        if v is None:
+            rows.append((name, paper, None, "MISSING"))
+            continue
+        ok = lo <= v <= hi
+        ok_all &= ok
+        rows.append((name, paper, round(v, 3), "PASS" if ok else "WARN"))
+    print("# paper-claim validation (band = same-regime reproduction)")
+    print("claim,paper,ours,status")
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    return ok_all, rows

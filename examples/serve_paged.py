@@ -1,0 +1,72 @@
+"""DaeMon paged-KV serving: generation + movement-ledger comparison.
+
+Runs batched decode twice with the two-tier DaemonKVStore handling KV page
+residency: once DaeMon-style (critical sub-block fetches + compressed page
+migrations + adaptive selection) and once Remote-style (uncompressed
+page-only movement), and reports wire bytes + hit ratios — the serving
+analogue of paper fig 8/19.
+
+  PYTHONPATH=src python examples/serve_paged.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.daemon_store import (KVStoreConfig, init_kv_store,
+                                     step_fetch)
+from repro.models.model import ModelOptions, init_model
+from repro.runtime.serve_loop import ServeConfig, serve_batch
+
+
+def kv_movement_ledger(compress: bool, steps: int = 120):
+    """Replay a zipf page-access stream through the two-tier store."""
+    cfg = KVStoreConfig(num_local_pages=16, page_tokens=16, kv_heads=4,
+                        head_dim=64, compress_pages=compress,
+                        page_budget_per_step=8)
+    state = init_kv_store(cfg)
+    key = jax.random.PRNGKey(0)
+    remote_k = jax.random.normal(key, (64, 16, 4, 64), jnp.float32)
+    remote_v = jax.random.normal(jax.random.fold_in(key, 1),
+                                 (64, 16, 4, 64), jnp.float32)
+    rng = np.random.default_rng(0)
+    pages = (rng.zipf(1.4, size=(steps, 4)).clip(1, 64) - 1).astype(
+        np.int32)
+    fetch = jax.jit(lambda st, need: step_fetch(st, cfg, remote_k,
+                                                remote_v, need))
+    for t in range(steps):
+        state, k, v, hit = fetch(state, jnp.asarray(pages[t]))
+    return {k: float(v) for k, v in state.stats.items()}
+
+
+def main():
+    print("== generation (reduced qwen3-1.7b) ==")
+    cfg = get_config("qwen3-1.7b").reduced()
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 2, 200,
+                                 jnp.int32)
+    out = serve_batch(params, cfg, prompts, ServeConfig(max_new_tokens=10))
+    for row in out:
+        print("  gen:", row.tolist())
+
+    print("\n== DaeMon KV movement ledger vs Remote-style ==")
+    daemon = kv_movement_ledger(compress=True)
+    remote = kv_movement_ledger(compress=False)
+    for name, led in (("daemon", daemon), ("remote-style", remote)):
+        hr = led["local_hits"] / max(led["requests"], 1)
+        print(f"  {name:13s} wire={led['wire_bytes']/1e6:7.2f}MB "
+              f"(raw {led['uncompressed_bytes']/1e6:7.2f}MB) "
+              f"pages={led['page_moves']:.0f} "
+              f"sub_blocks={led['sub_block_fetches']:.0f} hit={hr:.2f}")
+    saving = 1 - daemon["wire_bytes"] / remote["wire_bytes"]
+    print(f"  => DaeMon moves {saving*100:.1f}% fewer wire bytes at equal "
+          "service (compressed page plane + critical sub-blocks)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Reproduce the paper's headline figures with the DES (quick mode).
+
+  PYTHONPATH=src:. python examples/sim_paper_figures.py [fig3 fig8 ...]
+Full-length runs: PYTHONPATH=src python -m benchmarks.run
+"""
+import sys
+from pathlib import Path
+
+root = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(root / "src"))
+sys.path.insert(0, str(root))
+
+from benchmarks import figures  # noqa: E402
+
+
+def main():
+    which = sys.argv[1:] or ["fig3", "fig10"]
+    r = 20000
+    for name in which:
+        fn = getattr(figures, [f for f in dir(figures)
+                               if f.startswith(name)][0])
+        fn(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+# The paper's primary contribution — DaeMon as a composable JAX module.
+#
+# engine.py       functional DaeMon compute/memory engines (queues, inflight
+#                 CAM-equivalents, §4.2 selection unit, §4.3 dirty unit)
+# bandwidth.py    §4.1 approximate bandwidth partitioning (virtual channels)
+# compression.py  §4.4 link compression, TPU-adapted (int8/int4 blocks, BDI)
+# daemon_store.py two-tier paged KV store for serving (sub-block critical
+#                 plane + compressed page plane + adaptive selection)
+# params.py       hardware constants from paper Table 1/2
+from repro.core.bandwidth import (Channel, PartitionedLink, init_channel,
+                                  init_link, send_line, send_page, transmit)
+from repro.core.compression import (dequantize_block_int4,
+                                    dequantize_block_int8, ef_compress,
+                                    quantize_block_int4,
+                                    quantize_block_int8)
+from repro.core.engine import (INVALID, MOVED, SCHEDULED, THROTTLED,
+                               EngineState, find, first_free,
+                               init_engine_state, note_dirty_eviction,
+                               retire_arrivals, schedule_line,
+                               schedule_page, select_granularity,
+                               utilization)
+from repro.core.params import DaemonParams, NetworkParams

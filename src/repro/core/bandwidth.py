@@ -1,0 +1,73 @@
+"""Approximate bandwidth partitioning (paper §4.1) as virtual channels.
+
+The queue controller serves cache-line and page requests at a fixed byte
+ratio (default 25% of bandwidth for lines -> ~21 line slots per page slot).
+A busy-until clock per virtual channel models exactly that steady-state
+split: the line channel owns `ratio x BW`, the page channel the rest, and
+un-partitioned schemes share one channel FIFO — which is precisely how
+critical lines end up stalled behind 4KB pages.
+
+Both the network link and the remote-memory bus are partitioned (§4.1).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+class Channel(NamedTuple):
+    busy_until: jnp.ndarray      # f32 scalar (ns)
+
+
+def init_channel() -> Channel:
+    return Channel(busy_until=jnp.zeros((), F32))
+
+
+def transmit(ch: Channel, t_ready, nbytes, bw_bytes_per_ns
+             ) -> Tuple[Channel, jnp.ndarray]:
+    """Serialize `nbytes` on the channel; returns (channel, done_time)."""
+    start = jnp.maximum(t_ready, ch.busy_until)
+    done = start + nbytes / bw_bytes_per_ns
+    return Channel(busy_until=done), done
+
+
+def occupy(ch: Channel, t_ready, nbytes, bw_bytes_per_ns, *, gate=True
+           ) -> Tuple[Channel, jnp.ndarray]:
+    """transmit() that can be disabled (gate=False -> state unchanged)."""
+    start = jnp.maximum(t_ready, ch.busy_until)
+    done = start + nbytes / bw_bytes_per_ns
+    new_busy = jnp.where(gate, done, ch.busy_until)
+    return Channel(busy_until=new_busy), jnp.where(gate, done, t_ready)
+
+
+class PartitionedLink(NamedTuple):
+    """Two virtual channels over one physical link."""
+    line: Channel
+    page: Channel
+
+
+def init_link() -> PartitionedLink:
+    return PartitionedLink(line=init_channel(), page=init_channel())
+
+
+def line_bw(bw: float, ratio: float) -> float:
+    return bw * ratio
+
+
+def page_bw(bw: float, ratio: float) -> float:
+    return bw * (1.0 - ratio)
+
+
+def send_line(link: PartitionedLink, t, nbytes, bw, ratio, *, gate=True
+              ) -> Tuple[PartitionedLink, jnp.ndarray]:
+    ch, done = occupy(link.line, t, nbytes, line_bw(bw, ratio), gate=gate)
+    return link._replace(line=ch), done
+
+
+def send_page(link: PartitionedLink, t, nbytes, bw, ratio, *, gate=True
+              ) -> Tuple[PartitionedLink, jnp.ndarray]:
+    ch, done = occupy(link.page, t, nbytes, page_bw(bw, ratio), gate=gate)
+    return link._replace(page=ch), done

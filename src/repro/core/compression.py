@@ -1,0 +1,111 @@
+"""Link compression for tensor movement (DaeMon §4.4, TPU-adapted).
+
+The paper uses a ratio-optimized LZ77/MXT compressor for page migrations,
+tolerating its 64-cycle latency because the critical path rides the
+decoupled cache-line channel. Byte-serial LZ match search does not map to a
+systolic/vector machine, so the TPU-native *ratio-optimized* compressor for
+ML tensors is blockwise low-bit quantization (int8/int4 + per-block scale,
+ratio ~3.6-7.2x vs f32) with optional error feedback for gradient links.
+BDI (base+delta-immediate) covers *exact* integer/pointer-like pages.
+
+These are the pure-jnp reference implementations used inside distributed
+graphs (CPU dry-run lowers them); `repro.kernels` holds the Pallas TPU
+kernels validated against these in interpret mode.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def _blocked(x, block: int):
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, block), pad
+
+
+def quantize_block_int8(x, block: int = 256) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-block int8 quantization. Returns (q int8, scales f32)."""
+    xb, _ = _blocked(x.astype(F32), block)
+    amax = jnp.max(jnp.abs(xb), axis=1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def dequantize_block_int8(q, scale, shape, block: int = 256):
+    x = q.astype(F32) * scale[:, None]
+    n = 1
+    for d in shape:
+        n *= d
+    return x.reshape(-1)[:n].reshape(shape)
+
+
+def quantize_block_int4(x, block: int = 256):
+    """Packed int4 (two nibbles per int8 byte). Returns (packed, scales)."""
+    xb, _ = _blocked(x.astype(F32), block)
+    amax = jnp.max(jnp.abs(xb), axis=1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 7.0, 1.0)
+    q = jnp.clip(jnp.round(xb / scale), -7, 7).astype(jnp.int8) + 8  # [1,15]
+    lo, hi = q[:, 0::2], q[:, 1::2]
+    packed = (lo | (hi << 4)).astype(jnp.uint8)
+    return packed, scale[:, 0]
+
+
+def dequantize_block_int4(packed, scale, shape, block: int = 256):
+    lo = (packed & 0xF).astype(jnp.int8) - 8
+    hi = ((packed >> 4) & 0xF).astype(jnp.int8) - 8
+    q = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[0], -1)
+    x = q.astype(F32) * scale[:, None]
+    n = 1
+    for d in shape:
+        n *= d
+    return x.reshape(-1)[:n].reshape(shape)
+
+
+# --------------------------------------------------------------------------
+# BDI (base + delta-immediate) — exact compression for integer-like pages
+# --------------------------------------------------------------------------
+def bdi_compress_block(x_i32, delta_bits: int = 8):
+    """One 'page block' of int32 words -> (base, deltas int8, exact mask).
+
+    A block compresses iff every word fits base + int8 delta. Returns
+    (base (), deltas (n,) int8, ok ()) — callers fall back to raw storage
+    for ok=False blocks (that bookkeeping is what the simulator models).
+    """
+    base = x_i32[0]
+    delta = x_i32.astype(jnp.int64) - base.astype(jnp.int64)
+    lim = 2 ** (delta_bits - 1)
+    ok = jnp.all((delta >= -lim) & (delta < lim))
+    deltas = jnp.clip(delta, -lim, lim - 1).astype(jnp.int8)
+    return base, deltas, ok
+
+
+def bdi_decompress_block(base, deltas):
+    return (base.astype(jnp.int64) + deltas.astype(jnp.int64)).astype(
+        jnp.int32)
+
+
+def compression_ratio_int8(shape, block: int = 256) -> float:
+    """Wire ratio f32 -> (int8 + f32 scale/block)."""
+    n = 1
+    for d in shape:
+        n *= d
+    nblocks = -(-n // block)
+    return (4.0 * n) / (n + 4.0 * nblocks)
+
+
+# --------------------------------------------------------------------------
+# error feedback for gradient links (keeps compressed-DP unbiased-ish)
+# --------------------------------------------------------------------------
+def ef_compress(g, residual, block: int = 256):
+    """Error-feedback int8 compression: q(g + residual), new residual."""
+    target = g.astype(F32) + residual
+    q, scale = quantize_block_int8(target, block)
+    deq = dequantize_block_int8(q, scale, target.shape, block)
+    return q, scale, target - deq

@@ -1,0 +1,190 @@
+"""DaeMon engines as functional JAX state machines (paper §4).
+
+The paper's hardware structures are SRAM queues + CAM buffers. TPUs have no
+CAMs, so the functional equivalent is fixed-size integer arrays with
+vectorized membership tests (N <= 256 — free on a VPU). These transition
+functions are *pure* (state in, state out) so they can sit inside
+``lax.scan`` (the simulator), be vmapped across a config lattice, and be
+property-tested with hypothesis.
+
+State encoding:
+  inflight page buffer : keys (P,) int32 page ids (-1 empty),
+                         state (P,) int8 {0 invalid,1 scheduled,2 moved,
+                                          3 throttled}, arrival (P,) f32,
+                         dirty_cnt (P,) int8 (dirty unit occupancy, §4.3)
+  inflight sub-block buffer: keys (S,) int32 packed (page<<6|off),
+                         arrival (S,) f32
+Queue occupancy is tracked by the buffers (an entry is "in the queue" until
+its issue time) + the virtual-channel busy-until clocks in bandwidth.py.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import DaemonParams
+
+INVALID, SCHEDULED, MOVED, THROTTLED = 0, 1, 2, 3
+F32 = jnp.float32
+NEVER = jnp.float32(3.4e38)
+
+
+class EngineState(NamedTuple):
+    page_key: jnp.ndarray       # (P,) int32
+    page_state: jnp.ndarray     # (P,) int8
+    page_arrival: jnp.ndarray   # (P,) f32 — expected arrival time
+    page_issue: jnp.ndarray     # (P,) f32 — when the queue controller
+    #                             issues it (entry leaves the page queue)
+    page_dirty: jnp.ndarray     # (P,) int8 — dirty lines buffered (§4.3)
+    sb_key: jnp.ndarray         # (S,) int32, -1 empty
+    sb_arrival: jnp.ndarray     # (S,) f32
+
+
+def init_engine_state(p: DaemonParams) -> EngineState:
+    pb, sb = p.inflight_page_buf, p.inflight_sb_buf
+    return EngineState(
+        page_key=jnp.full((pb,), -1, jnp.int32),
+        page_state=jnp.zeros((pb,), jnp.int8),
+        page_arrival=jnp.full((pb,), NEVER, F32),
+        page_issue=jnp.full((pb,), NEVER, F32),
+        page_dirty=jnp.zeros((pb,), jnp.int8),
+        sb_key=jnp.full((sb,), -1, jnp.int32),
+        sb_arrival=jnp.full((sb,), NEVER, F32),
+    )
+
+
+def pack_line(page_id, offset):
+    return page_id * 64 + offset
+
+
+# ---------------------------------------------------------------- lookups
+def find(keys, key) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(found: bool, idx: int32). Vectorized CAM lookup."""
+    hit = keys == key
+    return jnp.any(hit), jnp.argmax(hit)
+
+
+def utilization(keys) -> jnp.ndarray:
+    return jnp.mean((keys >= 0).astype(F32))
+
+
+def first_free(keys) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    free = keys < 0
+    return jnp.any(free), jnp.argmax(free)
+
+
+# ------------------------------------------------------------- selection
+def select_granularity(st: EngineState, page_id, now=None, *,
+                       selection_enabled: bool, always_both: bool
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """§4.2 selection granularity unit -> (send_line, send_page) bools.
+
+    * page not scheduled  -> always send the line; schedule the page too if
+      the inflight page buffer has room.
+    * page already inflight -> send the line only if the sub-block buffer
+      is less utilized than the page buffer AND the page has not been
+      issued yet at time `now` (still queued, so the line can win the race).
+    * always_both (BP scheme) bypasses the selection logic (but still
+      dedups inflight pages / full buffers).
+    """
+    page_found, pidx = find(st.page_key, page_id)
+    page_room, _ = first_free(st.page_key)
+    sb_room, _ = first_free(st.sb_key)
+    page_util = utilization(st.page_key)
+    sb_util = utilization(st.sb_key)
+    send_page = jnp.logical_and(~page_found, page_room)
+    if always_both:
+        send_line = sb_room
+    elif selection_enabled:
+        now = jnp.asarray(0.0 if now is None else now, F32)
+        page_issued = jnp.where(page_found,
+                                st.page_issue[pidx] <= now,
+                                False)
+        line_if_inflight = jnp.logical_and(sb_util < page_util,
+                                           ~page_issued)
+        send_line = jnp.where(page_found, line_if_inflight, True)
+        send_line = jnp.logical_and(send_line, sb_room)
+    else:
+        send_line = jnp.logical_and(~page_found, sb_room)
+    return send_line, send_page
+
+
+# ------------------------------------------------------------ scheduling
+def schedule_page(st: EngineState, page_id, issue_t, arrival_t
+                  ) -> EngineState:
+    ok, idx = first_free(st.page_key)
+    idx = jnp.where(ok, idx, 0)
+
+    def put(arr, val):
+        return arr.at[idx].set(jnp.where(ok, val, arr[idx]))
+
+    return st._replace(
+        page_key=put(st.page_key, page_id),
+        page_state=put(st.page_state, jnp.int8(SCHEDULED)),
+        page_arrival=put(st.page_arrival, arrival_t),
+        page_issue=put(st.page_issue, issue_t),
+        page_dirty=put(st.page_dirty, jnp.int8(0)),
+    )
+
+
+def schedule_line(st: EngineState, page_id, offset, arrival_t
+                  ) -> EngineState:
+    key = pack_line(page_id, offset)
+    ok, idx = first_free(st.sb_key)
+    idx = jnp.where(ok, idx, 0)
+    return st._replace(
+        sb_key=st.sb_key.at[idx].set(jnp.where(ok, key, st.sb_key[idx])),
+        sb_arrival=st.sb_arrival.at[idx].set(
+            jnp.where(ok, arrival_t, st.sb_arrival[idx])),
+    )
+
+
+# --------------------------------------------------------------- arrivals
+def retire_arrivals(st: EngineState, now) -> EngineState:
+    """Release every entry whose data has arrived by `now`.
+
+    Page arrival also drops pending sub-block entries of the same page
+    (§4.1: later line packets for that page are ignored) — unless the page
+    was throttled (§4.3), in which case it is re-requested by the caller.
+    """
+    page_done = (st.page_arrival <= now) & (st.page_state == SCHEDULED)
+    arrived_pages = jnp.where(page_done, st.page_key, -1)
+    # drop sub-block entries whose page just arrived
+    sb_page = st.sb_key // 64
+    sb_drop = jnp.isin(sb_page, arrived_pages, assume_unique=False) \
+        if hasattr(jnp, "isin") else jnp.zeros_like(st.sb_key, bool)
+    sb_done = (st.sb_arrival <= now) | sb_drop
+    return st._replace(
+        page_key=jnp.where(page_done, -1, st.page_key),
+        page_state=jnp.where(page_done, jnp.int8(INVALID),
+                             st.page_state).astype(jnp.int8),
+        page_arrival=jnp.where(page_done, NEVER, st.page_arrival),
+        page_issue=jnp.where(page_done, NEVER, st.page_issue),
+        page_dirty=jnp.where(page_done, jnp.int8(0),
+                             st.page_dirty).astype(jnp.int8),
+        sb_key=jnp.where(sb_done, -1, st.sb_key),
+        sb_arrival=jnp.where(sb_done, NEVER, st.sb_arrival),
+    )
+
+
+# ------------------------------------------------------------ dirty unit
+def note_dirty_eviction(st: EngineState, page_id, p: DaemonParams
+                        ) -> Tuple[EngineState, jnp.ndarray]:
+    """§4.3: a dirty line evicted while its page is inflight is buffered;
+    past the threshold the page entry is throttled (re-request on arrival).
+    Returns (state, buffered?) — buffered=False means write straight to
+    remote memory."""
+    found, idx = find(st.page_key, page_id)
+    cnt = jnp.where(found, st.page_dirty[idx] + 1, 0).astype(jnp.int8)
+    over = cnt > p.dirty_flush_threshold
+    new_state = jnp.where(
+        found & over, jnp.int8(THROTTLED), st.page_state[idx]
+    ).astype(jnp.int8)
+    st = st._replace(
+        page_dirty=st.page_dirty.at[idx].set(
+            jnp.where(found & ~over, cnt, jnp.int8(0))),
+        page_state=st.page_state.at[idx].set(new_state),
+    )
+    return st, found & ~over

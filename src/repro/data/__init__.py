@@ -1,0 +1,2 @@
+from repro.data.pipeline import (DataConfig, make_batch_specs,
+                                 synthetic_batch_iterator)

@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: BDI (base + delta-immediate) page compression.
+
+The paper's link compressor is LZ77/MXT — byte-serial match search that
+does not map to a vector unit. BDI is the canonical *hardware* compressor
+that does: one base word per block + narrow deltas, all lane-parallel.
+It covers the exact-data page plane (integer/pointer-heavy pages); float
+tensors ride the int8 quantizer instead (see DESIGN.md §2).
+
+Tiling mirrors qdq_int8: (TILE_N, block) int32 tiles in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 8
+
+
+def _compress_kernel(x_ref, base_ref, delta_ref, ok_ref):
+    x = x_ref[...]
+    base = x[:, :1]
+    delta = x - base                      # int32 lane-parallel subtract
+    ok = jnp.all((delta >= -128) & (delta < 128), axis=1, keepdims=True)
+    base_ref[...] = base
+    delta_ref[...] = jnp.clip(delta, -128, 127).astype(jnp.int8)
+    ok_ref[...] = ok.astype(jnp.int8)
+
+
+def _decompress_kernel(base_ref, delta_ref, ok_ref, raw_ref, o_ref):
+    rec = base_ref[...] + delta_ref[...].astype(jnp.int32)
+    o_ref[...] = jnp.where(ok_ref[...].astype(bool), rec, raw_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bdi_compress(x2d_i32, *, interpret: bool = True):
+    """(N,B) int32 -> (base (N,1) i32, deltas (N,B) i8, ok (N,1) i8)."""
+    n, b = x2d_i32.shape
+    assert n % TILE_N == 0
+    grid = (n // TILE_N,)
+    return pl.pallas_call(
+        _compress_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE_N, b), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((TILE_N, 1), lambda i: (i, 0)),
+                   pl.BlockSpec((TILE_N, b), lambda i: (i, 0)),
+                   pl.BlockSpec((TILE_N, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((n, b), jnp.int8),
+                   jax.ShapeDtypeStruct((n, 1), jnp.int8)],
+        interpret=interpret,
+    )(x2d_i32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bdi_decompress(base, deltas, ok, raw, *, interpret: bool = True):
+    n, b = deltas.shape
+    assert n % TILE_N == 0
+    grid = (n // TILE_N,)
+    return pl.pallas_call(
+        _decompress_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE_N, 1), lambda i: (i, 0)),
+                  pl.BlockSpec((TILE_N, b), lambda i: (i, 0)),
+                  pl.BlockSpec((TILE_N, 1), lambda i: (i, 0)),
+                  pl.BlockSpec((TILE_N, b), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((TILE_N, b), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, b), jnp.int32),
+        interpret=interpret,
+    )(base, deltas, ok, raw)

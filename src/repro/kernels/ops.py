@@ -1,0 +1,57 @@
+"""Backend-dispatched wrappers for the Pallas kernels.
+
+On TPU the compiled Pallas kernels run natively; on CPU (this container)
+the pure-jnp oracles run instead, with interpret mode reserved for kernel
+validation in tests — never for production graphs (interpret is a Python
+interpreter, ~1000x slower).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bdi as _bdi
+from repro.kernels import paged_gather as _pg
+from repro.kernels import qdq_int8 as _qdq
+from repro.kernels import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def quantize_block_int8(x2d, impl: str = "auto"):
+    if impl == "pallas" or (impl == "auto" and _on_tpu()):
+        return _qdq.quantize_block_int8(x2d, interpret=not _on_tpu())
+    return _ref.quantize_block_int8(x2d)
+
+
+def dequantize_block_int8(q, scale, out_dtype=jnp.float32,
+                          impl: str = "auto"):
+    if impl == "pallas" or (impl == "auto" and _on_tpu()):
+        return _qdq.dequantize_block_int8(q, scale, out_dtype=out_dtype,
+                                          interpret=not _on_tpu())
+    return _ref.dequantize_block_int8(q, scale, out_dtype)
+
+
+def bdi_compress(x2d_i32, impl: str = "auto"):
+    if impl == "pallas" or (impl == "auto" and _on_tpu()):
+        return _bdi.bdi_compress(x2d_i32, interpret=not _on_tpu())
+    return _ref.bdi_compress(x2d_i32)
+
+
+def bdi_decompress(base, deltas, ok, raw, impl: str = "auto"):
+    if impl == "pallas" or (impl == "auto" and _on_tpu()):
+        return _bdi.bdi_decompress(base, deltas, ok, raw,
+                                   interpret=not _on_tpu())
+    return _ref.bdi_decompress(base, deltas, ok, raw)
+
+
+def paged_gather(pool, idx, impl: str = "auto"):
+    if impl == "pallas" or (impl == "auto" and _on_tpu()):
+        return _pg.paged_gather(pool, idx, interpret=not _on_tpu())
+    return _ref.paged_gather(pool, idx)
+
+
+def paged_scatter(pool, idx, pages):
+    return _pg.paged_scatter(pool, idx, pages)

@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: paged KV gather — the DaeMon sub-block critical plane.
+
+Gathers pages (or single-token sub-blocks) from the HBM-resident pool into
+a contiguous VMEM-backed output, driven by a scalar-prefetched index list —
+the page table is known before the grid runs, so the TPU can pipeline the
+HBM->VMEM copies (this is the "fetch the requested line straight into the
+LLC" path of the paper, in TPU clothes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _HAVE_PLTPU = True
+except Exception:  # pragma: no cover
+    _HAVE_PLTPU = False
+
+
+def _gather_kernel(idx_ref, pool_ref, out_ref):
+    del idx_ref  # consumed by the index_map (scalar prefetch)
+    out_ref[...] = pool_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_gather(pool, idx, *, interpret: bool = True):
+    """pool: (P, page, H, D); idx: (L,) int32 -> (L, page, H, D)."""
+    p, page, h, d = pool.shape
+    l = idx.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(l,),
+        in_specs=[pl.BlockSpec((1, page, h, d),
+                               lambda i, idx_ref: (idx_ref[i], 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, page, h, d),
+                               lambda i, idx_ref: (i, 0, 0, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((l, page, h, d), pool.dtype),
+        interpret=interpret,
+    )(idx, pool)
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def paged_scatter(pool, idx, pages):
+    """Write `pages` (L, page, H, D) into pool rows idx.
+
+    The bulk page plane runs *off* the critical path (DaeMon §4.1), so XLA's
+    native scatter (donated, in-place) is already bandwidth-optimal here —
+    a Pallas kernel would buy nothing. The gather above is the critical
+    sub-block plane and is the kernel.
+    """
+    return pool.at[idx].set(pages)

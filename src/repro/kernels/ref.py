@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` of kernels/).
+
+These are the ground truth for tests/test_kernels.py; the distributed
+graphs on CPU also run these (Pallas lowering needs a real TPU; interpret
+mode is for validation only).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def quantize_block_int8(x2d):
+    """x2d: (N, B) f32 -> (q int8 (N,B), scale f32 (N,1))."""
+    amax = jnp.max(jnp.abs(x2d.astype(F32)), axis=1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x2d.astype(F32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_block_int8(q, scale, dtype=F32):
+    return (q.astype(F32) * scale).astype(dtype)
+
+
+def bdi_compress(x2d_i32, delta_bits: int = 8):
+    """x2d: (N, B) int32 -> (base (N,1) i32, deltas (N,B) i8, ok (N,1) i8).
+
+    A row compresses iff every word fits base + int8 delta (BDI-style).
+    """
+    base = x2d_i32[:, :1]
+    delta = x2d_i32.astype(jnp.int64) - base.astype(jnp.int64)
+    lim = 2 ** (delta_bits - 1)
+    ok = jnp.all((delta >= -lim) & (delta < lim), axis=1, keepdims=True)
+    deltas = jnp.clip(delta, -lim, lim - 1).astype(jnp.int8)
+    return base, deltas, ok.astype(jnp.int8)
+
+
+def bdi_decompress(base, deltas, ok, raw):
+    """Reconstruct: compressed rows from base+delta, others from raw."""
+    rec = (base.astype(jnp.int64) + deltas.astype(jnp.int64)).astype(
+        jnp.int32)
+    return jnp.where(ok.astype(bool), rec, raw)
+
+
+def paged_gather(pool, idx):
+    """pool: (P, page, H, D); idx: (L,) int32 -> (L, page, H, D).
+
+    The DaeMon critical-path fetch: gather hot KV pages from the pool.
+    """
+    return pool[idx]
+
+
+def paged_scatter(pool, idx, pages):
+    """Inverse: write pages back into the pool at idx."""
+    return pool.at[idx].set(pages)
+
+
+def decode_attention_paged(q, kpages, vpages, page_table, lengths):
+    """Paged flash-decode oracle.
+
+    q: (B, NH, D); kpages/vpages: (P, page, KV, D) pool;
+    page_table: (B, MAXP) int32 page ids (-1 pad); lengths: (B,) tokens.
+    Returns (B, NH, D). KV heads broadcast to NH.
+    """
+    b, nh, d = q.shape
+    p, page, kvh, _ = kpages.shape
+    maxp = page_table.shape[1]
+    group = nh // kvh
+    tbl = jnp.maximum(page_table, 0)
+    k = kpages[tbl]                        # (B, MAXP, page, KV, D)
+    v = vpages[tbl]
+    k = k.reshape(b, maxp * page, kvh, d)
+    v = v.reshape(b, maxp * page, kvh, d)
+    k = jnp.repeat(k, group, axis=2)
+    v = jnp.repeat(v, group, axis=2)
+    s = jnp.einsum("bnd,btnd->bnt", q.astype(F32), k.astype(F32))
+    s = s / jnp.sqrt(jnp.asarray(d, F32))
+    pos = jnp.arange(maxp * page)
+    mask = pos[None, :] < lengths[:, None]
+    s = jnp.where(mask[:, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bnt,btnd->bnd", w, v.astype(F32)).astype(q.dtype)

@@ -1,0 +1,118 @@
+"""Abstract specs for every dry-run cell: params, optimizer, caches, inputs.
+
+Everything is built with ``jax.eval_shape`` + ``ShapeDtypeStruct`` — zero
+device allocation (the pattern that lets a 1-CPU container validate a
+512-chip program).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.data.pipeline import make_batch_specs
+from repro.models.model import (ModelOptions, init_decode_state, init_model)
+from repro.optim.adamw import adamw_init
+from repro.runtime import mesh_rules
+
+F32 = jnp.float32
+
+
+def model_options_for(cfg: ArchConfig, shape: ShapeConfig,
+                      **overrides) -> ModelOptions:
+    # remat="full" is the fits-everywhere baseline; "dots" is the hillclimb
+    # knob for cells with memory headroom (see EXPERIMENTS.md §Perf).
+    kw = dict(moe_impl="ep" if cfg.is_moe else "dense",
+              triangular_flash=True, remat="full")
+    if shape.name.startswith("long"):
+        kw["kv_seq_axis"] = "long_seq"
+    kw.update(overrides)
+    return ModelOptions(**kw)
+
+
+def abstract_params(cfg: ArchConfig, dtype=None):
+    """(param ShapeDtypeStructs, axes). dtype=bf16 for serving params."""
+    box = {}
+
+    def init_only_params(key):
+        p, a = init_model(key, cfg)
+        box["axes"] = a
+        return p
+
+    shapes = jax.eval_shape(init_only_params, jax.random.PRNGKey(0))
+    if dtype is not None:
+        shapes = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, dtype if jnp.issubdtype(s.dtype, jnp.floating)
+                else s.dtype), shapes)
+    return shapes, box["axes"]
+
+
+def abstract_train_state(cfg: ArchConfig):
+    """(params, opt_state) specs + axes trees."""
+    p_shapes, p_axes = abstract_params(cfg)
+    o_shapes = jax.eval_shape(adamw_init, p_shapes)
+    o_axes = {"mu": p_axes, "nu": p_axes, "count": ()}
+    return (p_shapes, o_shapes), (p_axes, o_axes)
+
+
+def abstract_decode_state(cfg: ArchConfig, batch: int, max_len: int,
+                          opt: ModelOptions):
+    box = {}
+
+    def init_only_state():
+        s, a = init_decode_state(cfg, batch, max_len, opt)
+        box["axes"] = a
+        return s
+
+    shapes = jax.eval_shape(init_only_state)
+    return shapes, box["axes"]
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, opt: ModelOptions):
+    """ShapeDtypeStruct stand-ins for every input of the lowered step fn.
+
+    train  : (params, opt_state, batch, step)
+    prefill: (params_bf16, batch)
+    decode : (params_bf16, state, tokens, pos)
+    Returns (args tuple, shardings-args tuple builder fn(mesh)).
+    """
+    if shape.kind == "train":
+        (p, o), (pa, oa) = abstract_train_state(cfg)
+        batch, baxes = make_batch_specs(cfg, shape)
+        step = jax.ShapeDtypeStruct((), jnp.int32)
+        args = (p, o, batch, step)
+        axes = (pa, oa, baxes, ())
+    elif shape.kind == "prefill":
+        p, pa = abstract_params(cfg, dtype=jnp.bfloat16)
+        batch, baxes = make_batch_specs(cfg, shape, dtype=jnp.bfloat16)
+        args = (p, batch)
+        axes = (pa, baxes)
+    else:  # decode
+        p, pa = abstract_params(cfg, dtype=jnp.bfloat16)
+        state, sa = abstract_decode_state(cfg, shape.global_batch,
+                                          shape.seq_len, opt)
+        tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        args = (p, state, tokens, pos)
+        axes = (pa, sa, ("batch", None), ())
+    return args, axes
+
+
+def shardings_for(args, axes, mesh):
+    """Map (args, logical axes) trees -> NamedSharding trees."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    def one(ax, arr):
+        if isinstance(arr, jax.ShapeDtypeStruct) or hasattr(arr, "shape"):
+            if ax == () and getattr(arr, "ndim", len(arr.shape)) == 0:
+                return NamedSharding(mesh, PartitionSpec())
+            return mesh_rules.named_sharding(ax, arr.shape, mesh)
+        return NamedSharding(mesh, PartitionSpec())
+
+    return jax.tree.map(one, axes, args,
+                        is_leaf=lambda x: mesh_rules is not None
+                        and isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))

@@ -1,0 +1,275 @@
+"""GQA attention: direct + blockwise(flash-style) + decode-with-KV-cache.
+
+Sharding design (see EXPERIMENTS.md §Perf iteration "gqa-heads-layout"):
+K/V heads are broadcast to the full query-head count *at use* so every
+attention tensor carries a head dim of `num_heads`, which shards cleanly
+over the `tensor`(model) mesh axis (K=4/G=8 sub-dims of a grouped layout
+cannot shard 16-way and forced replication + all-gathers). KV *caches*
+keep kv_heads (memory) and are sequence-parallel: the cache seq dim maps
+to `kv_seq` (model axis) or `long_seq` (data+model) — XLA then derives the
+flash-decode partial-softmax collectives automatically.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (F32, ParamBuilder, apply_rope, dot, rms_norm)
+from repro.runtime.mesh_rules import constrain
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, cross: bool = False):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nh, nkv = cfg.num_heads, cfg.num_kv_heads
+    pb = ParamBuilder(key)
+    pb.add("wq", (d, nh, hd), ("fsdp", "tensor", None))
+    pb.add("wk", (d, nkv, hd), ("fsdp", "tensor_kv", None))
+    pb.add("wv", (d, nkv, hd), ("fsdp", "tensor_kv", None))
+    pb.add("wo", (nh, hd, d), ("tensor", None, "fsdp"))
+    if cfg.qk_norm and not cross:
+        pb.add("q_norm", (hd,), (None,), init="zeros")
+        pb.add("k_norm", (hd,), (None,), init="zeros")
+    return pb.build()
+
+
+def _project_qkv(params, cfg, x, kv_x, positions, kv_positions, use_rope):
+    dtype = x.dtype
+    q = dot(x, params["wq"].astype(dtype), "bsd,dnh->bsnh").astype(dtype)
+    k = dot(kv_x, params["wk"].astype(dtype), "btd,dkh->btkh").astype(dtype)
+    v = dot(kv_x, params["wv"].astype(dtype), "btd,dkh->btkh").astype(dtype)
+    if "q_norm" in params:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _expand_kv(t, cfg):
+    """(B,T,K,H) -> (B,T,NH,H): broadcast KV heads to query heads."""
+    group = cfg.num_heads // cfg.num_kv_heads
+    if group == 1:
+        return t
+    return jnp.repeat(t, group, axis=2)
+
+
+def _mask_bias(qpos, kpos, causal: bool, window: int):
+    """(len(qpos), len(kpos)) additive mask in f32."""
+    ok = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        ok &= qpos[:, None] >= kpos[None, :]
+    if window:
+        ok &= (qpos[:, None] - kpos[None, :]) < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(F32)
+
+
+def _direct_attention(q, k, v, qpos, kpos, causal, window):
+    """q: (B,S,N,H); k,v: (B,T,N,H) (already head-expanded)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = dot(q, k, "bsnh,btnh->bnst") * scale            # f32
+    s = s + _mask_bias(qpos, kpos, causal, window)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return dot(p, v, "bnst,btnh->bsnh").astype(q.dtype)
+
+
+def _pick_block(t: int, target: int = 1024) -> int:
+    for b in range(min(target, t), 0, -1):
+        if t % b == 0:
+            return b
+    return t
+
+
+def _flash_attention(q, k, v, qpos, kpos, causal, window,
+                     kv_block: int = 1024, triangular: bool = True):
+    """Blockwise attention with running (m, l, acc): O(S*block) memory.
+
+    triangular=True enumerates only the (q-block, kv-block) tiles a causal
+    (optionally banded/windowed) mask can reach — a *static* pair list
+    scanned with lax.scan: reverse-mode differentiable and ~2x fewer HLO
+    FLOPs than scanning all KV blocks (more with windows). §Perf.
+    """
+    b, s, nh, hd = q.shape
+    t = k.shape[1]
+    blk = _pick_block(t, kv_block)
+    nblk = t // blk
+    scale = 1.0 / math.sqrt(hd)
+
+    if not (triangular and causal):
+        acc0 = jnp.zeros((b, s, nh, hd), F32)
+        m0 = jnp.full((b, nh, s), -jnp.inf, F32)
+        l0 = jnp.zeros((b, nh, s), F32)
+
+        def scan_body(carry, i):
+            acc, m, l = carry
+            ks = jax.lax.dynamic_slice_in_dim(k, i * blk, blk, 1)
+            vs = jax.lax.dynamic_slice_in_dim(v, i * blk, blk, 1)
+            kp = jax.lax.dynamic_slice_in_dim(kpos, i * blk, blk, 0)
+            sc = dot(q, ks, "bsnh,btnh->bnst") * scale
+            sc = sc + _mask_bias(qpos, kp, causal, window)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            pv = dot(p.astype(q.dtype), vs, "bnst,btnh->bsnh")
+            acc = acc * corr.transpose(0, 2, 1)[..., None] + pv
+            return (acc, m_new, l), ()
+
+        (acc, m, l), _ = jax.lax.scan(scan_body, (acc0, m0, l0),
+                                      jnp.arange(nblk))
+        l = jnp.maximum(l, 1e-30)
+        return (acc / l.transpose(0, 2, 1)[..., None]).astype(q.dtype)
+
+    # ---- triangular / banded tile enumeration (static pair list) ----
+    qblk = _pick_block(s, kv_block)
+    nq = s // qblk
+    pairs = []
+    for qi in range(nq):
+        for kj in range(nblk):
+            lo_q, hi_q = qi * qblk, (qi + 1) * qblk - 1
+            lo_k = kj * blk
+            if lo_k > hi_q:            # fully above the causal diagonal
+                continue
+            if window and (lo_q - (kj + 1) * blk + 1) >= window:
+                continue               # fully outside the band
+            pairs.append((qi, kj))
+    pairs = jnp.asarray(pairs, jnp.int32)
+
+    acc0 = jnp.zeros((b, s, nh, hd), F32)
+    m0 = jnp.full((b, nh, s), -jnp.inf, F32)
+    l0 = jnp.zeros((b, nh, s), F32)
+
+    def pair_step(carry, pair):
+        acc, m, l = carry
+        qi, kj = pair[0], pair[1]
+        qs = jax.lax.dynamic_slice_in_dim(q, qi * qblk, qblk, 1)
+        qp = jax.lax.dynamic_slice_in_dim(qpos, qi * qblk, qblk, 0)
+        ks = jax.lax.dynamic_slice_in_dim(k, kj * blk, blk, 1)
+        vs = jax.lax.dynamic_slice_in_dim(v, kj * blk, blk, 1)
+        kp = jax.lax.dynamic_slice_in_dim(kpos, kj * blk, blk, 0)
+        sc = dot(qs, ks, "bsnh,btnh->bnst") * scale
+        sc = sc + _mask_bias(qp, kp, True, window)
+        mq = jax.lax.dynamic_slice_in_dim(m, qi * qblk, qblk, 2)
+        lq = jax.lax.dynamic_slice_in_dim(l, qi * qblk, qblk, 2)
+        aq = jax.lax.dynamic_slice_in_dim(acc, qi * qblk, qblk, 1)
+        m_new = jnp.maximum(mq, sc.max(axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(mq - m_new)
+        lq = lq * corr + p.sum(axis=-1)
+        pv = dot(p.astype(q.dtype), vs, "bnst,btnh->bsnh")
+        aq = aq * corr.transpose(0, 2, 1)[..., None] + pv
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, aq, qi * qblk, 1)
+        m = jax.lax.dynamic_update_slice_in_dim(m, m_new, qi * qblk, 2)
+        l = jax.lax.dynamic_update_slice_in_dim(l, lq, qi * qblk, 2)
+        return (acc, m, l), ()
+
+    (acc, m, l), _ = jax.lax.scan(pair_step, (acc0, m0, l0), pairs)
+    l = jnp.maximum(l, 1e-30)
+    return (acc / l.transpose(0, 2, 1)[..., None]).astype(q.dtype)
+
+
+def attention(params, cfg, x, *, kv_x=None, positions=None,
+              kv_positions=None, causal=True, window=0,
+              flash_threshold=2048, triangular=True, reduce_dtype=None):
+    """Full-sequence attention (training / prefill). x: (B,S,D)."""
+    b, s, _ = x.shape
+    cross = kv_x is not None
+    kv_in = kv_x if cross else x
+    t = kv_in.shape[1]
+    if positions is None:
+        positions = jnp.arange(s)
+    if kv_positions is None:
+        kv_positions = jnp.arange(t)
+    q, k, v = _project_qkv(params, cfg, x, kv_in, positions, kv_positions,
+                           use_rope=not cross)
+    k = _expand_kv(k, cfg)
+    v = _expand_kv(v, cfg)
+    q = constrain(q, ("batch", None, "tensor", None))
+    k = constrain(k, ("batch", None, "tensor", None))
+    v = constrain(v, ("batch", None, "tensor", None))
+    if max(s, t) > flash_threshold:
+        out = _flash_attention(q, k, v, positions, kv_positions,
+                               causal and not cross, window,
+                               triangular=triangular)
+    else:
+        out = _direct_attention(q, k, v, positions, kv_positions,
+                                causal and not cross, window)
+    y = jnp.einsum("bsnh,nhd->bsd", out, params["wo"].astype(x.dtype),
+                   preferred_element_type=reduce_dtype or F32)
+    return constrain(y.astype(x.dtype), ("batch", None, None))
+
+
+# --------------------------------------------------------------------------
+# decode path (one new token against a KV cache)
+# --------------------------------------------------------------------------
+def init_kv_cache(cfg, batch: int, max_len: int, kv_seq_axis: str = "kv_seq"):
+    """Abstract/zero KV cache for one layer + its logical axes."""
+    hd = cfg.resolved_head_dim
+    shape = (batch, max_len, cfg.num_kv_heads, hd)
+    axes = ("batch", kv_seq_axis, "tensor_kv", None)
+    dt = jnp.dtype(cfg.dtype)  # bf16 on TPU configs; f32 for CPU smoke
+    cache = {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+    return cache, {"k": axes, "v": axes}
+
+
+def decode_attention(params, cfg, x, cache, pos, *, window=0,
+                     kv_seq_axis="kv_seq", ring=False):
+    """x: (B,1,D); cache {k,v}: (B,T,K,H); pos: scalar current position.
+
+    The cache seq dim stays sharded (`kv_seq_axis`); the softmax over the
+    sharded seq dim lowers to partial softmax + small all-reduces
+    (flash-decode). KV heads are expanded at use; the expansion fuses into
+    the attention dots.
+
+    ring=True (windowed archs, §Perf "ring-kv"): the cache holds only the
+    last `window` tokens; writes land at pos % window. RoPE is applied at
+    write time with absolute positions, and every resident entry is within
+    the window by construction, so only the warm-up mask (pos < window)
+    is needed.
+    """
+    b = x.shape[0]
+    t = cache["k"].shape[1]
+    positions = jnp.full((1,), pos)
+    q, k_new, v_new = _project_qkv(params, cfg, x, x, positions, positions,
+                                   use_rope=True)
+    write_at = pos % t if ring else pos
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), write_at, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), write_at, axis=1)
+    k = constrain(k, ("batch", kv_seq_axis, "tensor_kv", None))
+    v = constrain(v, ("batch", kv_seq_axis, "tensor_kv", None))
+    kx = _expand_kv(k, cfg)
+    vx = _expand_kv(v, cfg)
+    scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
+    s = dot(q, kx, "bsnh,btnh->bnst") * scale           # (B,N,1,T) f32
+    kpos = jnp.arange(t)
+    if ring:
+        ok = kpos[None, :] <= pos                        # warm-up only
+    else:
+        ok = kpos[None, :] <= pos
+        if window:
+            ok &= (pos - kpos[None, :]) < window
+    s = s + jnp.where(ok, 0.0, NEG_INF).astype(F32)
+    p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = dot(p, vx, "bnst,btnh->bsnh").astype(x.dtype)
+    y = dot(out, params["wo"].astype(x.dtype), "bsnh,nhd->bsd").astype(x.dtype)
+    return y, {"k": k, "v": v}
+
+
+def decode_cross_attention(params, cfg, x, cross_kv, enc_len):
+    """Cross-attention during decode: static precomputed encoder KV."""
+    q = dot(x, params["wq"].astype(x.dtype), "bsd,dnh->bsnh").astype(x.dtype)
+    kx = _expand_kv(cross_kv["k"].astype(x.dtype), cfg)
+    vx = _expand_kv(cross_kv["v"].astype(x.dtype), cfg)
+    scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
+    s = dot(q, kx, "bsnh,btnh->bnst") * scale
+    p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = dot(p, vx, "bnst,btnh->bsnh").astype(x.dtype)
+    return dot(out, params["wo"].astype(x.dtype),
+               "bsnh,nhd->bsd").astype(x.dtype)

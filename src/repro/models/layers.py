@@ -1,0 +1,205 @@
+"""Shared layer primitives: params-as-pytrees, RMSNorm, RoPE, SwiGLU MLP.
+
+Every ``init_*`` returns ``(params, axes)`` — two pytrees with identical
+structure; ``axes`` leaves are tuples of *logical* axis names consumed by
+``runtime.mesh_rules`` (sharding with divisibility fallback). Model code is
+functional: ``apply(params, cfg, ...)``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+# --------------------------------------------------------------------------
+# param construction
+# --------------------------------------------------------------------------
+class ParamBuilder:
+    """Accumulates (params, axes) pairs under split PRNG keys."""
+
+    def __init__(self, key):
+        self.key = key
+        self.params = {}
+        self.axes = {}
+
+    def _next(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def add(self, name, shape, axes, *, scale: Optional[float] = None,
+            init: str = "normal", dtype=F32):
+        assert len(axes) == len(shape), (name, axes, shape)
+        k = self._next()
+        if init == "zeros":
+            v = jnp.zeros(shape, dtype)
+        elif init == "ones":
+            v = jnp.ones(shape, dtype)
+        elif init == "normal":
+            s = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+            v = (jax.random.normal(k, shape, F32) * s).astype(dtype)
+        elif init == "uniform":
+            s = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+            v = (jax.random.uniform(k, shape, F32, -s, s)).astype(dtype)
+        else:
+            raise ValueError(init)
+        self.params[name] = v
+        self.axes[name] = tuple(axes)
+        return v
+
+    def sub(self, name, init_fn, *args, **kw):
+        p, a = init_fn(self._next(), *args, **kw)
+        self.params[name] = p
+        self.axes[name] = a
+        return p
+
+    def build(self):
+        return self.params, self.axes
+
+
+def stack_layers(key, init_fn, n, *args, **kw):
+    """Init `n` layers with vmap over keys -> stacked (n, ...) params.
+
+    axes get a leading "layers" logical axis (never sharded; scan dim).
+    """
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: init_fn(k, *args, **kw)[0])(keys)
+    box = {}
+
+    def _only_params(k):  # capture axes (python objects) via trace side channel
+        p, a = init_fn(k, *args, **kw)
+        box["axes"] = a
+        return p
+
+    jax.eval_shape(_only_params, keys[0])
+    axes = jax.tree.map(lambda a: ("layers",) + a, box["axes"],
+                        is_leaf=_is_axes)
+    return params, axes
+
+
+def _is_axes(x):
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None)))
+                                        for e in x)
+
+
+def is_axes_leaf(x):
+    return _is_axes(x)
+
+
+# --------------------------------------------------------------------------
+# numerics
+# --------------------------------------------------------------------------
+def rms_norm(x, scale, eps: float = 1e-6):
+    """RMSNorm in f32, output in x.dtype."""
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(F32))).astype(x.dtype)
+
+
+def init_rms_norm(key, dim):
+    del key
+    return {"scale": jnp.zeros((dim,), F32)}, {"scale": (None,)}
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def dot(a, b, spec):
+    """einsum with f32 accumulation (MXU-style)."""
+    return jnp.einsum(spec, a, b, preferred_element_type=F32)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float):
+    half = head_dim // 2
+    return theta ** (-jnp.arange(0, half, dtype=F32) / half)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, n_heads, head_dim) or (..., seq, head_dim with heads
+    folded); positions: (..., seq). Rotates pairs (even, odd halves)."""
+    half = x.shape[-1] // 2
+    freqs = rope_frequencies(x.shape[-1], theta)          # (half,)
+    angles = positions[..., None].astype(F32) * freqs     # (..., seq, half)
+    # insert the heads axis between seq and head_dim; batch dims broadcast
+    angles = angles[..., None, :]                         # (..., seq, 1, half)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = x[..., :half].astype(F32), x[..., half:].astype(F32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# embeddings / unembedding
+# --------------------------------------------------------------------------
+def round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def padded_vocab(vocab_size: int) -> int:
+    """Pad the physical vocab so it shards over the model axis (and the MXU
+    lane dim); logical vocab stays cfg.vocab_size."""
+    return round_up(vocab_size, 512)
+
+
+def init_embedding(key, vocab: int, d_model: int):
+    pb = ParamBuilder(key)
+    pb.add("table", (padded_vocab(vocab), d_model), ("vocab", "fsdp"),
+           scale=1.0)
+    return pb.build()
+
+
+def embed(params, tokens, dtype):
+    return params["table"].astype(dtype)[tokens]
+
+
+def unembed(params, x):
+    # logits in f32 for a stable softmax/xent
+    return dot(x, params["table"].astype(x.dtype), "bsd,vd->bsv")
+
+
+# --------------------------------------------------------------------------
+# SwiGLU MLP
+# --------------------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int):
+    pb = ParamBuilder(key)
+    pb.add("w_gate", (d_model, d_ff), ("fsdp", "tensor"))
+    pb.add("w_up", (d_model, d_ff), ("fsdp", "tensor"))
+    pb.add("w_down", (d_ff, d_model), ("tensor", "fsdp"))
+    return pb.build()
+
+
+def mlp(params, x, reduce_dtype=None):
+    dtype = x.dtype
+    g = dot(x, params["w_gate"].astype(dtype), "bsd,df->bsf")
+    u = dot(x, params["w_up"].astype(dtype), "bsd,df->bsf")
+    h = (silu(g) * u).astype(dtype)
+    # row-parallel output: accumulation dtype sets the TP all-reduce width
+    y = jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(dtype),
+                   preferred_element_type=reduce_dtype or F32)
+    return y.astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# losses
+# --------------------------------------------------------------------------
+def softmax_xent(logits, labels, mask=None, z_loss: float = 1e-4):
+    """Cross entropy with optional z-loss; logits f32 (B,S,V), labels (B,S)."""
+    logits = logits.astype(F32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - gold
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    if mask is None:
+        return jnp.mean(loss)
+    mask = mask.astype(F32)
+    return jnp.sum(loss * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,496 @@
+"""Model assembly: family-dispatched decoder stacks with scan-over-layers.
+
+Supports all assigned families:
+  dense/moe/vlm : uniform GQA transformer stack (MoE swaps the MLP)
+  audio         : whisper-style encoder-decoder with cross-attention
+  ssm           : xLSTM runs (mLSTM/sLSTM patterns)
+  hybrid        : zamba2 — Mamba2 backbone + one *shared* attention block
+                  invoked every `shared_attn_every` layers (tied params)
+
+Entry points:
+  init_model(key, cfg)                      -> (params, axes)
+  forward(params, cfg, batch, opt)          -> (logits, aux)
+  loss_fn(params, cfg, batch, opt)          -> (loss, metrics)
+  init_decode_state(cfg, batch, max_len, opt)-> (state, axes)
+  decode_step(params, cfg, state, tokens, pos, opt) -> (logits, state)
+  prefill(params, cfg, batch, max_len, opt) -> (logits, state)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, MAMBA2, MLSTM, SLSTM, ArchConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.attention import (attention, decode_attention,
+                                    decode_cross_attention, init_attention,
+                                    init_kv_cache)
+from repro.models.layers import (F32, ParamBuilder, embed, init_embedding,
+                                 init_mlp, init_rms_norm, mlp, rms_norm,
+                                 softmax_xent, stack_layers, unembed)
+from repro.runtime.mesh_rules import constrain
+
+
+@dataclass(frozen=True)
+class ModelOptions:
+    """Run-time (non-architectural) choices; hillclimb knobs live here."""
+    moe_impl: str = "dense"            # "dense" | "ep"
+    triangular_flash: bool = True      # skip fully-masked causal KV blocks
+    flash_threshold: int = 2048
+    remat: str = "dots"                # "none" | "full" | "dots"
+    kv_seq_axis: str = "kv_seq"        # "kv_seq" | "long_seq"
+    ssd_chunk: int = 256
+    window_override: Optional[int] = None  # force sliding window (long ctx)
+    # §Perf iteration "bf16-tp-collectives": row-parallel matmul outputs
+    # (attention wo, MLP w_down) accumulate in bf16 so the Megatron-style
+    # TP all-reduce crosses the link at half width (f32 -> bf16).
+    tp_reduce_bf16: bool = False
+    # §Perf iteration "sp-residuals" (Megatron-SP): shard the residual
+    # stream's seq dim over the model axis — TP all-reduces become
+    # reduce-scatter + all-gather pairs and norm work shrinks /TP.
+    seq_shard_residual: bool = False
+    # §Perf iteration "ring-kv": windowed archs keep only the last
+    # `window` tokens of KV (cache rows = window, writes at pos % window).
+    window_ring: bool = False
+
+
+def _window(cfg, opt):
+    return opt.window_override if opt.window_override is not None \
+        else cfg.window
+
+
+def _plan(cfg: ArchConfig):
+    """Decoder stack as runs of identical block kinds: [(kind, count)]."""
+    runs = []
+    for kind in cfg.blocks():
+        if runs and runs[-1][0] == kind:
+            runs[-1] = (kind, runs[-1][1] + 1)
+        else:
+            runs.append((kind, 1))
+    return runs
+
+
+# ==========================================================================
+# init
+# ==========================================================================
+def _init_block(key, cfg, kind, cross: bool):
+    pb = ParamBuilder(key)
+    if kind == ATTN:
+        pb.sub("norm1", init_rms_norm, cfg.d_model)
+        pb.sub("attn", lambda k: init_attention(k, cfg))
+        if cross:
+            pb.sub("norm_x", init_rms_norm, cfg.d_model)
+            pb.sub("xattn", lambda k: init_attention(k, cfg, cross=True))
+        pb.sub("norm2", init_rms_norm, cfg.d_model)
+        if cfg.is_moe:
+            pb.sub("ffn", lambda k: moe_mod.init_moe(k, cfg))
+        else:
+            pb.sub("ffn", lambda k: init_mlp(k, cfg.d_model, cfg.d_ff))
+    elif kind == MAMBA2:
+        pb.sub("norm1", init_rms_norm, cfg.d_model)
+        pb.sub("mixer", lambda k: ssm_mod.init_mamba2(k, cfg))
+    elif kind == MLSTM:
+        pb.sub("norm1", init_rms_norm, cfg.d_model)
+        pb.sub("mixer", lambda k: xlstm_mod.init_mlstm(k, cfg))
+    elif kind == SLSTM:
+        pb.sub("norm1", init_rms_norm, cfg.d_model)
+        pb.sub("mixer", lambda k: xlstm_mod.init_slstm(k, cfg))
+    else:
+        raise ValueError(kind)
+    return pb.build()
+
+
+def init_model(key, cfg: ArchConfig):
+    pb = ParamBuilder(key)
+    pb.sub("embed", init_embedding, cfg.vocab_size, cfg.d_model)
+    cross = cfg.cross_attention
+    runs_p, runs_a = [], []
+    for kind, count in _plan(cfg):
+        p, a = stack_layers(pb._next(), _init_block, count, cfg, kind, cross)
+        runs_p.append(p)
+        runs_a.append(a)
+    pb.params["runs"] = tuple(runs_p)
+    pb.axes["runs"] = tuple(runs_a)
+    if cfg.shared_attn_every:
+        pb.sub("shared_attn",
+               lambda k: _init_block(k, cfg, ATTN, cross=False))
+    if cfg.encoder_layers:
+        enc_p, enc_a = stack_layers(pb._next(), _init_block,
+                                    cfg.encoder_layers, cfg, ATTN, False)
+        pb.params["encoder"] = {"runs": enc_p}
+        pb.axes["encoder"] = {"runs": enc_a}
+        en, ea = init_rms_norm(pb._next(), cfg.d_model)
+        pb.params["encoder"]["norm"] = en
+        pb.axes["encoder"]["norm"] = ea
+    pb.sub("final_norm", init_rms_norm, cfg.d_model)
+    pb.sub("unembed", init_embedding, cfg.vocab_size, cfg.d_model)
+    return pb.build()
+
+
+# ==========================================================================
+# forward blocks (training / prefill)
+# ==========================================================================
+def _apply_block(kind, p, cfg, x, opt, *, causal=True, window=0, enc=None,
+                 positions=None, collect_kv=False):
+    """Returns (x, aux, kv_or_None)."""
+    aux = jnp.zeros((), F32)
+    kv = None
+    rdt = jnp.bfloat16 if opt.tp_reduce_bf16 else None
+    if kind == ATTN:
+        h = rms_norm(x, p["norm1"]["scale"])
+        y = attention(p["attn"], cfg, h, positions=positions, causal=causal,
+                      window=window, flash_threshold=opt.flash_threshold,
+                      triangular=opt.triangular_flash, reduce_dtype=rdt)
+        if collect_kv:
+            # recompute K/V cheaply for the cache (fused by XLA with above)
+            dt = h.dtype
+            k = jnp.einsum("btd,dkh->btkh", h, p["attn"]["wk"].astype(dt))
+            if "k_norm" in p["attn"]:
+                k = rms_norm(k, p["attn"]["k_norm"])
+            k = attn_mod.apply_rope(
+                k, positions if positions is not None
+                else jnp.arange(h.shape[1]), cfg.rope_theta)
+            v = jnp.einsum("btd,dkh->btkh", h, p["attn"]["wv"].astype(dt))
+            kv = {"k": k.astype(dt), "v": v.astype(dt)}
+        x = x + y
+        if enc is not None:
+            h = rms_norm(x, p["norm_x"]["scale"])
+            x = x + attention(p["xattn"], cfg, h, kv_x=enc, causal=False,
+                              flash_threshold=opt.flash_threshold)
+        h = rms_norm(x, p["norm2"]["scale"])
+        if cfg.is_moe:
+            y, aux = moe_mod.moe(p["ffn"], cfg, h, impl=opt.moe_impl)
+        else:
+            y = mlp(p["ffn"], h, reduce_dtype=rdt)
+        x = x + y
+    elif kind == MAMBA2:
+        h = rms_norm(x, p["norm1"]["scale"])
+        x = x + ssm_mod.mamba2(p["mixer"], cfg, h, chunk=opt.ssd_chunk)
+    elif kind == MLSTM:
+        h = rms_norm(x, p["norm1"]["scale"])
+        x = x + xlstm_mod.mlstm(p["mixer"], cfg, h)
+    elif kind == SLSTM:
+        h = rms_norm(x, p["norm1"]["scale"])
+        x = x + xlstm_mod.slstm(p["mixer"], cfg, h)
+    x = constrain(x, ("batch",
+                      "seq_sp" if opt.seq_shard_residual else None, None))
+    return x, aux, kv
+
+
+def _remat(fn, opt):
+    if opt.remat == "none":
+        return fn
+    if opt.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def _run_scan(run_params, kind, x, cfg, opt, *, causal=True, window=0,
+              enc=None, positions=None, collect_kv=False):
+    """Scan a run of `n` identical blocks with stacked params."""
+
+    def body(carry, layer_p):
+        xx, aux = carry
+        xx, a, kv = _apply_block(kind, layer_p, cfg, xx, opt, causal=causal,
+                                 window=window, enc=enc, positions=positions,
+                                 collect_kv=collect_kv)
+        return (xx, aux + a), kv
+
+    (x, aux), kvs = jax.lax.scan(_remat(body, opt), (x, jnp.zeros((), F32)),
+                                 run_params)
+    return x, aux, kvs
+
+
+def _zamba_groups(params, cfg):
+    """Reshape the stacked (L, ...) mamba params into (groups, per, ...)."""
+    per = cfg.shared_attn_every
+    groups = cfg.num_layers // per
+    return jax.tree.map(
+        lambda t: t.reshape((groups, per) + t.shape[1:]), params), groups, per
+
+
+def _forward_stack(params, cfg, x, opt, *, positions=None, enc=None,
+                   collect_kv=False):
+    """Run the decoder stack. Returns (x, aux, caches: list per run)."""
+    aux_total = jnp.zeros((), F32)
+    caches = []
+    window = _window(cfg, opt)
+    if cfg.shared_attn_every:
+        # zamba2: groups of `per` mamba layers + tied shared-attn block
+        run_params = params["runs"][0]
+        gp, groups, per = _zamba_groups(run_params, cfg)
+        x0 = x
+        shared_p = params["shared_attn"]
+
+        def _shared_block(sa_in):
+            return _apply_block(
+                ATTN, shared_p, cfg, sa_in, opt, causal=True, window=window,
+                positions=positions, collect_kv=collect_kv)
+
+        shared_fn = _remat(_shared_block, opt)
+
+        def group_body(carry, g_params):
+            xx, aux = carry
+            xx, a, _ = _run_scan(g_params, MAMBA2, xx, cfg, opt,
+                                 positions=positions)
+            sa_in = xx + x0  # embedding re-injection (zamba2 concat, simplified)
+            sa_out, a2, kv = shared_fn(sa_in)
+            return (sa_out, aux + a + a2), kv
+
+        (x, aux_total), kvs = jax.lax.scan(
+            group_body, (x, aux_total), gp)
+        caches.append(kvs)
+    else:
+        for (kind, count), run_params in zip(_plan(cfg), params["runs"]):
+            x, aux, kvs = _run_scan(run_params, kind, x, cfg, opt,
+                                    causal=True, window=window, enc=enc,
+                                    positions=positions,
+                                    collect_kv=collect_kv and kind == ATTN)
+            aux_total = aux_total + aux
+            caches.append(kvs)
+    return x, aux_total, caches
+
+
+def _encode(params, cfg, frontend, opt):
+    """Whisper-style encoder over stubbed frame embeddings (B, T_enc, D)."""
+    x = frontend.astype(jnp.dtype(cfg.dtype))
+    x, _, _ = _run_scan(params["encoder"]["runs"], ATTN, x, cfg, opt,
+                        causal=False)
+    return rms_norm(x, params["encoder"]["norm"]["scale"])
+
+
+def forward(params, cfg: ArchConfig, batch, opt: ModelOptions):
+    """Training/prefill forward. batch: {tokens, (frontend)} -> (logits, aux)."""
+    dtype = jnp.dtype(cfg.dtype)
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens, dtype)
+    enc = None
+    if cfg.frontend == "vision_stub":
+        x = jnp.concatenate([batch["frontend"].astype(dtype), x], axis=1)
+    elif cfg.frontend == "audio_stub":
+        enc = _encode(params, cfg, batch["frontend"], opt)
+    x = constrain(x, ("batch", None, None))
+    positions = jnp.arange(x.shape[1])
+    x, aux, _ = _forward_stack(params, cfg, x, opt, positions=positions,
+                               enc=enc)
+    x = rms_norm(x, params["final_norm"]["scale"])
+    logits = unembed(params["unembed"], x)
+    return logits, aux
+
+
+def loss_fn(params, cfg: ArchConfig, batch, opt: ModelOptions):
+    logits, aux = forward(params, cfg, batch, opt)
+    if cfg.frontend == "vision_stub":
+        logits = logits[:, cfg.frontend_tokens:, :]
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    xent = softmax_xent(logits[:, :-1, :], labels[:, 1:],
+                        None if mask is None else mask[:, 1:])
+    loss = xent + 0.01 * aux
+    return loss, {"xent": xent, "aux": aux}
+
+
+# ==========================================================================
+# decode state + step
+# ==========================================================================
+def _init_block_state(cfg, kind, batch, max_len, opt, cross=False):
+    if kind == ATTN:
+        window = _window(cfg, opt)
+        if opt.window_ring and window:
+            max_len = min(max_len, window)
+        cache, axes = init_kv_cache(cfg, batch, max_len, opt.kv_seq_axis)
+        if cross:
+            xshape = (batch, cfg.encoder_seq, cfg.num_kv_heads,
+                      cfg.resolved_head_dim)
+            cache["xk"] = jnp.zeros(xshape, jnp.dtype(cfg.dtype))
+            cache["xv"] = jnp.zeros(xshape, jnp.dtype(cfg.dtype))
+            axes["xk"] = ("batch", None, "tensor_kv", None)
+            axes["xv"] = ("batch", None, "tensor_kv", None)
+        return cache, axes
+    if kind == MAMBA2:
+        return ssm_mod.init_mamba2_state(cfg, batch)
+    if kind == MLSTM:
+        return xlstm_mod.init_mlstm_state(cfg, batch)
+    if kind == SLSTM:
+        return xlstm_mod.init_slstm_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def _stack_state(state_axes_fn, n):
+    state, axes = state_axes_fn()
+    stacked = jax.tree.map(
+        lambda t: jnp.zeros((n,) + t.shape, t.dtype), state)
+    axes = jax.tree.map(lambda a: ("layers",) + a, axes,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+    return stacked, axes
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int,
+                      opt: ModelOptions):
+    """Full decode state: per-run stacked layer states (+ zamba shared KV)."""
+    cross = cfg.cross_attention
+    states, axes = [], []
+    if cfg.shared_attn_every:
+        groups = cfg.num_layers // cfg.shared_attn_every
+        s, a = _stack_state(
+            lambda: _init_block_state(cfg, MAMBA2, batch, max_len, opt),
+            cfg.num_layers)
+        s = jax.tree.map(
+            lambda t: t.reshape((groups, cfg.shared_attn_every)
+                                + t.shape[1:]), s)
+        a = jax.tree.map(lambda ax: ("layers",) + ax, a, is_leaf=_is_ax)
+        states.append(s)
+        axes.append(a)
+        ss, sa = _stack_state(
+            lambda: _init_block_state(cfg, ATTN, batch, max_len, opt),
+            groups)
+        states.append(ss)
+        axes.append(sa)
+    else:
+        for kind, count in _plan(cfg):
+            s, a = _stack_state(
+                lambda k=kind: _init_block_state(cfg, k, batch, max_len, opt,
+                                                 cross=cross), count)
+            states.append(s)
+            axes.append(a)
+    return {"runs": tuple(states)}, {"runs": tuple(axes)}
+
+
+def _is_ax(x):
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None)))
+                                        for e in x)
+
+
+def _decode_block(kind, p, cfg, x, state, pos, opt, window):
+    if kind == ATTN:
+        h = rms_norm(x, p["norm1"]["scale"])
+        y, new_kv = decode_attention(p["attn"], cfg, h,
+                                     {"k": state["k"], "v": state["v"]},
+                                     pos, window=window,
+                                     kv_seq_axis=opt.kv_seq_axis,
+                                     ring=opt.window_ring and window > 0)
+        new_state = dict(state)
+        new_state.update(new_kv)
+        x = x + y
+        if "xk" in state:
+            h = rms_norm(x, p["norm_x"]["scale"])
+            x = x + decode_cross_attention(
+                p["xattn"], cfg, h,
+                {"k": state["xk"], "v": state["xv"]}, cfg.encoder_seq)
+        h = rms_norm(x, p["norm2"]["scale"])
+        if cfg.is_moe:
+            y, _ = moe_mod.moe(p["ffn"], cfg, h, impl=opt.moe_impl)
+        else:
+            y = mlp(p["ffn"], h)
+        return x + y, new_state
+    if kind == MAMBA2:
+        h = rms_norm(x, p["norm1"]["scale"])
+        y, st = ssm_mod.mamba2_decode(p["mixer"], cfg, h, state)
+        return x + y, st
+    if kind == MLSTM:
+        h = rms_norm(x, p["norm1"]["scale"])
+        y, st = xlstm_mod.mlstm_decode(p["mixer"], cfg, h, state)
+        return x + y, st
+    if kind == SLSTM:
+        h = rms_norm(x, p["norm1"]["scale"])
+        y, st = xlstm_mod.slstm_decode(p["mixer"], cfg, h, state)
+        return x + y, st
+    raise ValueError(kind)
+
+
+def decode_step(params, cfg: ArchConfig, state, tokens, pos,
+                opt: ModelOptions):
+    """One decode step. tokens: (B,1) int32; pos: scalar int32.
+
+    Returns (logits (B, vocab_padded), new_state).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed(params["embed"], tokens, dtype)
+    x = constrain(x, ("batch", None, None))
+    window = _window(cfg, opt)
+    new_runs = []
+    if cfg.shared_attn_every:
+        gp, groups, per = _zamba_groups(params["runs"][0], cfg)
+        x0 = x
+        shared_p = params["shared_attn"]
+
+        def group_body(xx, inp):
+            g_params, g_state, sa_state = inp
+
+            def layer_body(xxx, inp2):
+                lp, ls = inp2
+                y, st = _decode_block(MAMBA2, lp, cfg, xxx, ls, pos, opt,
+                                      window)
+                return y, st
+
+            xx, new_g_state = jax.lax.scan(layer_body, xx,
+                                           (g_params, g_state))
+            sa_out, new_sa = _decode_block(ATTN, shared_p, cfg, xx + x0,
+                                           sa_state, pos, opt, window)
+            return sa_out, (new_g_state, new_sa)
+
+        x, (new_m, new_sa) = jax.lax.scan(
+            group_body, x, (gp, state["runs"][0], state["runs"][1]))
+        new_runs = [new_m, new_sa]
+    else:
+        for (kind, count), run_params, run_state in zip(
+                _plan(cfg), params["runs"], state["runs"]):
+
+            def layer_body(xx, inp, _kind=kind):
+                lp, ls = inp
+                y, st = _decode_block(_kind, lp, cfg, xx, ls, pos, opt,
+                                      window)
+                return y, st
+
+            x, new_state = jax.lax.scan(layer_body, x,
+                                        (run_params, run_state))
+            new_runs.append(new_state)
+    x = rms_norm(x, params["final_norm"]["scale"])
+    logits = unembed(params["unembed"], x)[:, 0, :]
+    return logits, {"runs": tuple(new_runs)}
+
+
+def prefill(params, cfg: ArchConfig, batch, max_len: int, opt: ModelOptions):
+    """Prefill: forward + build a decode-ready state (ATTN KV caches filled).
+
+    Recurrent-state families (ssm/xlstm) fill their states via their own
+    scan; for the dry-run matrix `prefill_32k` lowers this function.
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed(params["embed"], tokens, dtype)
+    enc = None
+    if cfg.frontend == "vision_stub":
+        x = jnp.concatenate([batch["frontend"].astype(dtype), x], axis=1)
+    elif cfg.frontend == "audio_stub":
+        enc = _encode(params, cfg, batch["frontend"], opt)
+    x = constrain(x, ("batch", None, None))
+    positions = jnp.arange(x.shape[1])
+    x, aux, caches = _forward_stack(params, cfg, x, opt, positions=positions,
+                                    enc=enc, collect_kv=True)
+    x = rms_norm(x, params["final_norm"]["scale"])
+    logits = unembed(params["unembed"], x)
+    state, _ = init_decode_state(cfg, b, max_len, opt)
+    new_runs = list(state["runs"])
+    if not cfg.shared_attn_every:
+        for i, ((kind, count), kv) in enumerate(zip(_plan(cfg), caches)):
+            if kind == ATTN and kv is not None:
+                t = kv["k"].shape[2]
+                run = dict(new_runs[i]) if isinstance(new_runs[i], dict) \
+                    else new_runs[i]
+                run["k"] = jax.lax.dynamic_update_slice_in_dim(
+                    state["runs"][i]["k"], kv["k"], 0, axis=2)
+                run["v"] = jax.lax.dynamic_update_slice_in_dim(
+                    state["runs"][i]["v"], kv["v"], 0, axis=2)
+                new_runs[i] = run
+    return logits, {"runs": tuple(new_runs)}

@@ -1,0 +1,183 @@
+"""Mamba2 (SSD, chunked) block — training (chunk-parallel) + decode (O(1)).
+
+The chunked SSD formulation maps the recurrence onto MXU-friendly matmuls:
+intra-chunk quadratic attention-like products + an inter-chunk state scan.
+Decode keeps (B, H, P, N) state + a rolling conv window: O(1) per token —
+this is what makes the hybrid archs runnable at `long_500k`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import F32, ParamBuilder, dot, rms_norm, silu
+from repro.runtime.mesh_rules import constrain
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_head_dim
+    return d_in, nheads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_mamba2(key, cfg):
+    d = cfg.d_model
+    d_in, h, p, n = _dims(cfg)
+    w = cfg.ssm_conv_width
+    pb = ParamBuilder(key)
+    pb.add("wz", (d, d_in), ("fsdp", "tensor"))
+    pb.add("wx", (d, d_in), ("fsdp", "tensor"))
+    pb.add("wB", (d, n), ("fsdp", None))
+    pb.add("wC", (d, n), ("fsdp", None))
+    pb.add("wdt", (d, h), ("fsdp", "tensor"))
+    pb.add("dt_bias", (h,), ("tensor",), init="zeros")
+    pb.add("A_log", (h,), ("tensor",), init="zeros")   # A = -exp(A_log)
+    pb.add("D", (h,), ("tensor",), init="ones")
+    pb.add("conv_x", (w, d_in), (None, "tensor"), scale=0.5)
+    pb.add("conv_B", (w, n), (None, None), scale=0.5)
+    pb.add("conv_C", (w, n), (None, None), scale=0.5)
+    pb.add("norm", (d_in,), ("tensor",), init="zeros")
+    pb.add("wo", (d_in, d), ("tensor", "fsdp"))
+    return pb.build()
+
+
+def _causal_depthwise_conv(u, kernel):
+    """u: (B,S,C); kernel: (W,C). Causal depthwise conv."""
+    w = kernel.shape[0]
+    lhs = jnp.pad(u, ((0, 0), (w - 1, 0), (0, 0)))
+    rhs = kernel[:, None, :].astype(u.dtype)            # (W, 1, C)
+    out = jax.lax.conv_general_dilated(
+        lhs, rhs, window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=u.shape[-1])
+    return out
+
+
+def _pick_chunk(s: int, target: int = 256) -> int:
+    for q in range(min(target, s), 0, -1):
+        if s % q == 0:
+            return q
+    return s
+
+
+def _ssd_chunked(xh, dt, a, b_in, c_in, chunk, h0=None):
+    """Chunk-parallel SSD as a scan over chunks (peak memory = one chunk's
+    quadratic intra tensors, not nc of them).
+
+    xh (B,S,H,P), dt (B,S,H) [post-softplus], a (H,) [negative],
+    b_in/c_in (B,S,N). Returns y (B,S,H,P) and final state (B,H,P,N).
+    """
+    bsz, s, h, p = xh.shape
+    n = b_in.shape[-1]
+    q = _pick_chunk(s, chunk)
+    nc = s // q
+    tri = jnp.tril(jnp.ones((q, q), bool))
+
+    def ck(t):  # chunk a (B,S,...) tensor -> (nc,B,q,...) scan-major
+        return t.reshape((bsz, nc, q) + t.shape[2:]).swapaxes(0, 1)
+
+    xs = (ck(xh.astype(F32)), ck(dt), ck(b_in.astype(F32)),
+          ck(c_in.astype(F32)))
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), F32)
+
+    def chunk_step(hprev, inp):
+        xc, dtc, bc, cc = inp                           # (B,q,...)
+        da = dtc * a                                    # (B,q,H)
+        cs = jnp.cumsum(da, axis=1)
+        xdt = xc * dtc[..., None]                       # (B,q,H,P)
+        # intra-chunk (quadratic within q only); mask the exponent BEFORE
+        # exp — masking after yields inf on the dead triangle and the
+        # backward pass turns inf*0 into NaN
+        gap = cs[:, :, None, :] - cs[:, None, :, :]     # (B,i,j,H)
+        gap = jnp.where(tri[None, :, :, None], gap, -1e30)
+        decay = jnp.exp(gap)
+        g = jnp.einsum("bin,bjn->bij", cc, bc)          # (B,q,q)
+        mm = g[..., None] * decay
+        y_intra = jnp.einsum("bijh,bjhp->bihp", mm, xdt)
+        # inter-chunk from carried state
+        y_inter = jnp.einsum("bin,bhpn->bihp", cc, hprev) \
+            * jnp.exp(cs)[..., None]
+        # state update
+        to_end = jnp.exp(cs[:, -1:, :] - cs)            # (B,q,H)
+        s_chunk = jnp.einsum("bjh,bjhp,bjn->bhpn", to_end, xdt, bc)
+        hnew = hprev * jnp.exp(cs[:, -1, :])[..., None, None] + s_chunk
+        return hnew, y_intra + y_inter
+
+    hlast, ys = jax.lax.scan(chunk_step, h0, xs)        # ys (nc,B,q,H,P)
+    y = ys.swapaxes(0, 1).reshape(bsz, s, h, p)
+    return y, hlast
+
+
+def mamba2(params, cfg, x, chunk: int = 256):
+    """Training/prefill forward. x: (B,S,D) -> (B,S,D)."""
+    dtype = x.dtype
+    bsz, s, d = x.shape
+    d_in, h, p, n = _dims(cfg)
+    z = dot(x, params["wz"].astype(dtype), "bsd,de->bse").astype(dtype)
+    xr = dot(x, params["wx"].astype(dtype), "bsd,de->bse").astype(dtype)
+    br = dot(x, params["wB"].astype(dtype), "bsd,dn->bsn").astype(dtype)
+    cr = dot(x, params["wC"].astype(dtype), "bsd,dn->bsn").astype(dtype)
+    dt = dot(x, params["wdt"].astype(dtype), "bsd,dh->bsh")
+    dt = jax.nn.softplus(dt + params["dt_bias"].astype(F32))
+    xr = silu(_causal_depthwise_conv(xr, params["conv_x"]))
+    br = silu(_causal_depthwise_conv(br, params["conv_B"]))
+    cr = silu(_causal_depthwise_conv(cr, params["conv_C"]))
+    xh = xr.reshape(bsz, s, h, p)
+    xh = constrain(xh, ("batch", None, "tensor", None))
+    a = -jnp.exp(params["A_log"].astype(F32))
+    y, _ = _ssd_chunked(xh, dt, a, br, cr, chunk)
+    y = y + xh.astype(F32) * params["D"].astype(F32)[..., None]
+    y = (y.reshape(bsz, s, d_in) * silu(z.astype(F32))).astype(dtype)
+    y = rms_norm(y, params["norm"])
+    return dot(y, params["wo"].astype(dtype), "bse,ed->bsd").astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+def init_mamba2_state(cfg, batch: int):
+    d_in, h, p, n = _dims(cfg)
+    w = cfg.ssm_conv_width
+    state = {
+        "ssm": jnp.zeros((batch, h, p, n), F32),
+        "conv": jnp.zeros((batch, w, d_in + 2 * n), jnp.dtype(cfg.dtype)),
+    }
+    axes = {"ssm": ("batch", "tensor", None, None),
+            "conv": ("batch", None, None)}
+    return state, axes
+
+
+def mamba2_decode(params, cfg, x, state):
+    """x: (B,1,D); O(1) state update. Returns (y, new_state)."""
+    dtype = x.dtype
+    bsz = x.shape[0]
+    d_in, h, p, n = _dims(cfg)
+    xt = x[:, 0, :]
+    z = dot(xt, params["wz"].astype(dtype), "bd,de->be")
+    xr = dot(xt, params["wx"].astype(dtype), "bd,de->be")
+    br = dot(xt, params["wB"].astype(dtype), "bd,dn->bn")
+    cr = dot(xt, params["wC"].astype(dtype), "bd,dn->bn")
+    dt = dot(xt, params["wdt"].astype(dtype), "bd,dh->bh")
+    dt = jax.nn.softplus(dt + params["dt_bias"].astype(F32))
+    # rolling conv window over concat(x, B, C) channels
+    u = jnp.concatenate([xr, br, cr], axis=-1).astype(state["conv"].dtype)
+    conv = jnp.concatenate([state["conv"][:, 1:, :], u[:, None, :]], axis=1)
+    kern = jnp.concatenate([params["conv_x"], params["conv_B"],
+                            params["conv_C"]], axis=1)   # (W, d_in+2N)
+    conv_out = jnp.einsum("bwc,wc->bc", conv.astype(F32), kern.astype(F32))
+    conv_out = silu(conv_out)
+    xr = conv_out[:, :d_in]
+    br = conv_out[:, d_in:d_in + n]
+    cr = conv_out[:, d_in + n:]
+    xh = xr.reshape(bsz, h, p)
+    a = -jnp.exp(params["A_log"].astype(F32))
+    da = jnp.exp(dt * a)                                 # (B,H)
+    ssm = state["ssm"] * da[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, br)
+    y = jnp.einsum("bhpn,bn->bhp", ssm, cr) + xh * params["D"].astype(
+        F32)[..., None]
+    y = (y.reshape(bsz, d_in) * silu(z.astype(F32))).astype(dtype)
+    y = rms_norm(y, params["norm"])
+    out = dot(y, params["wo"].astype(dtype), "be,ed->bd").astype(dtype)
+    return out[:, None, :], {"ssm": ssm, "conv": conv}

@@ -1,0 +1,286 @@
+"""xLSTM blocks: mLSTM (matrix memory) + sLSTM (scalar memory, exp gating).
+
+Training uses a recurrent `lax.scan` over the sequence (compiled once;
+numerically exact). Decode is the same cell applied to one token — O(1)
+state, which is what qualifies xlstm-125m for `long_500k`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (F32, ParamBuilder, dot, rms_norm, round_up,
+                                 silu)
+from repro.runtime.mesh_rules import constrain
+
+
+# ==========================================================================
+# mLSTM
+# ==========================================================================
+def _mlstm_dims(cfg):
+    d_in = 2 * cfg.d_model
+    nh = cfg.num_heads
+    return d_in, nh, d_in // nh
+
+
+def init_mlstm(key, cfg):
+    d = cfg.d_model
+    d_in, nh, hd = _mlstm_dims(cfg)
+    pb = ParamBuilder(key)
+    pb.add("w_up", (d, d_in), ("fsdp", "tensor"))
+    pb.add("w_gate", (d, d_in), ("fsdp", "tensor"))
+    pb.add("wq", (d_in, nh, hd), ("tensor", None, None))
+    pb.add("wk", (d_in, nh, hd), ("tensor", None, None))
+    pb.add("wv", (d_in, nh, hd), ("tensor", None, None))
+    pb.add("wi", (d_in, nh), ("tensor", None), scale=0.02)
+    pb.add("wf", (d_in, nh), ("tensor", None), scale=0.02)
+    pb.add("bi", (nh,), (None,), init="zeros")
+    pb.add("bf", (nh,), (None,), init="ones")   # forget-bias > 0
+    pb.add("norm", (d_in,), ("tensor",), init="zeros")
+    pb.add("w_down", (d_in, d), ("tensor", "fsdp"))
+    return pb.build()
+
+
+def init_mlstm_state(cfg, batch: int):
+    d_in, nh, hd = _mlstm_dims(cfg)
+    state = {"C": jnp.zeros((batch, nh, hd, hd), F32),
+             "n": jnp.zeros((batch, nh, hd), F32),
+             "m": jnp.zeros((batch, nh), F32)}
+    axes = {"C": ("batch", None, None, None),
+            "n": ("batch", None, None),
+            "m": ("batch", None)}
+    return state, axes
+
+
+def _mlstm_cell(state, q, k, v, ig, fg):
+    """One step. q,k,v: (B,NH,HD); ig,fg: (B,NH) gate preactivations."""
+    c, n, m = state["C"], state["n"], state["m"]
+    flog = jax.nn.log_sigmoid(fg)                       # log f in (-inf, 0)
+    m_new = jnp.maximum(flog + m, ig)
+    fct = jnp.exp(flog + m - m_new)
+    ict = jnp.exp(ig - m_new)
+    c = c * fct[..., None, None] + ict[..., None, None] * (
+        v[..., :, None] * k[..., None, :])              # (B,NH,HD,HD)
+    n = n * fct[..., None] + ict[..., None] * k
+    num = jnp.einsum("bkij,bkj->bki", c, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bkj,bkj->bk", n, q)),
+                      jnp.exp(-m_new))[..., None]
+    h = num / den
+    return {"C": c, "n": n, "m": m_new}, h
+
+
+def _mlstm_qkvg(params, cfg, x):
+    dtype = x.dtype
+    d_in, nh, hd = _mlstm_dims(cfg)
+    a = silu(dot(x, params["w_up"].astype(dtype), "...d,de->...e"))
+    g = dot(x, params["w_gate"].astype(dtype), "...d,de->...e")
+    q = dot(a, params["wq"].astype(dtype), "...e,ekh->...kh")
+    k = dot(a, params["wk"].astype(dtype), "...e,ekh->...kh") / (hd ** 0.5)
+    v = dot(a, params["wv"].astype(dtype), "...e,ekh->...kh")
+    ig = dot(a, params["wi"].astype(dtype), "...e,ek->...k") \
+        + params["bi"].astype(F32)
+    fg = dot(a, params["wf"].astype(dtype), "...e,ek->...k") \
+        + params["bf"].astype(F32)
+    return q, k, v, ig, fg, g
+
+
+def _pick_chunk(s: int, target: int = 256) -> int:
+    for q in range(min(target, s), 0, -1):
+        if s % q == 0:
+            return q
+    return s
+
+
+def _mlstm_chunkwise(q, k, v, ig, fg, chunk: int = 256):
+    """Chunkwise-parallel mLSTM (TFLA-style): intra-chunk attention-like
+    matmuls + a scan over chunks carrying (C, n, m). Numerically matches the
+    per-token cell (tested) while keeping residuals at chunk boundaries.
+
+    q,k,v: (B,S,NH,HD); ig,fg: (B,S,NH). Returns h (B,S,NH,HD).
+    """
+    bsz, s, nh, hd = q.shape
+    cq = _pick_chunk(s, chunk)
+    nc = s // cq
+    tri = jnp.tril(jnp.ones((cq, cq), bool))
+
+    def ck(t):  # (B,S,...) -> (nc,B,...,q ordered scan-major)
+        return t.reshape((bsz, nc, cq) + t.shape[2:]).swapaxes(0, 1)
+
+    xs = (ck(q.astype(F32)), ck(k.astype(F32)), ck(v.astype(F32)),
+          ck(ig), ck(fg))
+    c0 = jnp.zeros((bsz, nh, hd, hd), F32)
+    n0 = jnp.zeros((bsz, nh, hd), F32)
+    m0 = jnp.full((bsz, nh), 0.0, F32)
+
+    def chunk_step(carry, inp):
+        c, n, m = carry
+        qc, kc, vc, igc, fgc = inp                       # (B,q,NH,...)
+        flog = jax.nn.log_sigmoid(fgc)                   # (B,q,NH)
+        b = jnp.cumsum(flog, axis=1)                     # within-chunk
+        a = igc - b                                      # (B,q,NH)
+        gmax = jax.lax.cummax(a, axis=1)
+        mt = jnp.maximum(m[:, None, :], gmax)            # M_t (B,q,NH)
+        # intra-chunk scores: S_ij = (q_i.k_j) exp(a_j - M_i), j<=i
+        sc = jnp.einsum("bikh,bjkh->bkij", qc, kc)       # (B,NH,q_i,q_j)
+        a_t = a.transpose(0, 2, 1)                       # (B,NH,q_j)
+        mt_t = mt.transpose(0, 2, 1)                     # (B,NH,q_i)
+        w_exp = a_t[:, :, None, :] - mt_t[:, :, :, None]  # (B,NH,i,j)
+        w_exp = jnp.where(tri[None, None], w_exp, -1e30)  # mask BEFORE exp
+        sc = sc * jnp.exp(w_exp)
+        num = jnp.einsum("bkij,bjkh->bikh", sc, vc)
+        den = sc.sum(axis=-1).transpose(0, 2, 1)         # (B,q,NH)
+        # inter-chunk from carried state: h_out[o] = sum_h C[o,h] q[h]
+        inter_w = jnp.exp(m[:, None, :] - mt)            # (B,q,NH)
+        num = num + jnp.einsum("bikh,bkoh->biko", qc, c) \
+            * inter_w[..., None]
+        den = den + jnp.einsum("bikh,bkh->bik", qc, n) * inter_w
+        m_step = b + mt                                  # running stabilizer
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_step))[..., None]
+        # end-of-chunk state:
+        # C_Q = e^{m + b_Q - m_new} C + sum_j e^{i_j + b_Q - b_j - m_new} v k^T
+        m_new = m_step[:, -1, :]
+        c_decay = jnp.exp(m + b[:, -1, :] - m_new)       # (B,NH)
+        wj = jnp.exp(igc + b[:, -1:, :] - b - m_new[:, None, :])  # (B,q,NH)
+        c_new = c * c_decay[..., None, None] + jnp.einsum(
+            "bjkh,bjk,bjki->bkhi", vc, wj, kc)
+        n_new = n * c_decay[..., None] + jnp.einsum("bjkh,bjk->bkh", kc, wj)
+        return (c_new, n_new, m_new), h
+
+    (_, _, _), hs = jax.lax.scan(chunk_step, (c0, n0, m0), xs)
+    return hs.swapaxes(0, 1).reshape(bsz, s, nh, hd)
+
+
+def mlstm(params, cfg, x, chunk: int = 256):
+    """Training forward, chunkwise-parallel. x: (B,S,D)."""
+    dtype = x.dtype
+    bsz, s, d = x.shape
+    d_in, nh, hd = _mlstm_dims(cfg)
+    q, k, v, ig, fg, g = _mlstm_qkvg(params, cfg, x)
+    hs = _mlstm_chunkwise(q, k, v, ig, fg, chunk)
+    h = hs.reshape(bsz, s, d_in)
+    h = rms_norm(h.astype(dtype), params["norm"])
+    h = (h.astype(F32) * silu(g.astype(F32))).astype(dtype)
+    return dot(h, params["w_down"].astype(dtype), "bse,ed->bsd").astype(dtype)
+
+
+def mlstm_decode(params, cfg, x, state):
+    """x: (B,1,D) -> (y, new_state)."""
+    dtype = x.dtype
+    bsz = x.shape[0]
+    d_in, nh, hd = _mlstm_dims(cfg)
+    q, k, v, ig, fg, g = _mlstm_qkvg(params, cfg, x[:, 0, :])
+    state, h = _mlstm_cell(state, q, k, v, ig, fg)
+    h = rms_norm(h.reshape(bsz, d_in).astype(dtype), params["norm"])
+    h = (h.astype(F32) * silu(g.astype(F32))).astype(dtype)
+    y = dot(h, params["w_down"].astype(dtype), "be,ed->bd").astype(dtype)
+    return y[:, None, :], state
+
+
+# ==========================================================================
+# sLSTM
+# ==========================================================================
+def _slstm_dims(cfg):
+    nh = cfg.num_heads
+    return nh, cfg.d_model // nh
+
+
+def init_slstm(key, cfg):
+    d = cfg.d_model
+    nh, dh = _slstm_dims(cfg)
+    dff = round_up(int(8 * d / 3), 16)
+    pb = ParamBuilder(key)
+    for gate in ("z", "i", "f", "o"):
+        pb.add(f"w_{gate}", (d, d), ("fsdp", "tensor"))
+        pb.add(f"r_{gate}", (nh, dh, dh), (None, None, None), scale=0.05)
+        pb.add(f"b_{gate}", (d,), (None,),
+               init="ones" if gate == "f" else "zeros")
+    pb.add("ffn_gate", (d, dff), ("fsdp", "tensor"))
+    pb.add("ffn_up", (d, dff), ("fsdp", "tensor"))
+    pb.add("ffn_down", (dff, d), ("tensor", "fsdp"))
+    pb.add("ffn_norm", (d,), (None,), init="zeros")
+    return pb.build()
+
+
+def init_slstm_state(cfg, batch: int):
+    d = cfg.d_model
+    state = {k: jnp.zeros((batch, d), F32) for k in ("c", "n", "h", "m")}
+    axes = {k: ("batch", None) for k in state}
+    return state, axes
+
+
+def _slstm_cell(params, cfg, state, wx):
+    """wx: dict gate -> (B,D) input contributions (precomputed Wx + b)."""
+    nh, dh = _slstm_dims(cfg)
+    bsz, d = state["h"].shape
+
+    def rec(gate):
+        hh = state["h"].reshape(bsz, nh, dh)
+        return jnp.einsum("bkh,khj->bkj", hh,
+                          params[f"r_{gate}"].astype(F32)).reshape(bsz, d)
+
+    zt = jnp.tanh(wx["z"] + rec("z"))
+    it = wx["i"] + rec("i")
+    ft = wx["f"] + rec("f")
+    ot = jax.nn.sigmoid(wx["o"] + rec("o"))
+    flog = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(flog + state["m"], it)
+    ict = jnp.exp(it - m_new)
+    fct = jnp.exp(flog + state["m"] - m_new)
+    c = fct * state["c"] + ict * zt
+    n = fct * state["n"] + ict
+    h = ot * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "h": h, "m": m_new}, h
+
+
+def _slstm_wx(params, x):
+    out = {}
+    for gate in ("z", "i", "f", "o"):
+        out[gate] = dot(x, params[f"w_{gate}"].astype(x.dtype),
+                        "...d,de->...e") + params[f"b_{gate}"].astype(F32)
+    return out
+
+
+def _slstm_ffn(params, x):
+    dtype = x.dtype
+    h = rms_norm(x, params["ffn_norm"])
+    g = dot(h, params["ffn_gate"].astype(dtype), "...d,df->...f")
+    u = dot(h, params["ffn_up"].astype(dtype), "...d,df->...f")
+    return x + dot((silu(g) * u).astype(dtype),
+                   params["ffn_down"].astype(dtype), "...f,fd->...d"
+                   ).astype(dtype)
+
+
+def slstm(params, cfg, x, chunk: int = 256):
+    """Training forward via chunk-checkpointed scan over S.
+
+    sLSTM is inherently sequential (scalar memory mixing); the outer scan
+    over chunks is wrapped in jax.checkpoint so backward residuals peak at
+    one chunk's worth (the xLSTM paper keeps sLSTM recurrent by design).
+    """
+    dtype = x.dtype
+    bsz, s, d = x.shape
+    wx = _slstm_wx(params, x)
+    state, _ = init_slstm_state(cfg, bsz)
+    cq = _pick_chunk(s, chunk)
+    nc = s // cq
+    xs = {k: v.reshape(bsz, nc, cq, d).transpose(1, 2, 0, 3)
+          for k, v in wx.items()}                        # (nc,q,B,D)
+
+    @jax.checkpoint
+    def chunk_body(st, xs_chunk):
+        def step(sti, inp):
+            sti, h = _slstm_cell(params, cfg, sti, inp)
+            return sti, h
+        st, hs = jax.lax.scan(step, st, xs_chunk)        # hs (q,B,D)
+        return st, hs
+
+    _, hs = jax.lax.scan(chunk_body, state, xs)          # (nc,q,B,D)
+    y = hs.transpose(2, 0, 1, 3).reshape(bsz, s, d).astype(dtype)
+    return _slstm_ffn(params, y)
+
+
+def slstm_decode(params, cfg, x, state):
+    wx = _slstm_wx(params, x[:, 0, :])
+    state, h = _slstm_cell(params, cfg, state, wx)
+    y = _slstm_ffn(params, h.astype(x.dtype))
+    return y[:, None, :], state

@@ -1,0 +1,70 @@
+"""AdamW in pure JAX (pytree-based), with global-norm clipping.
+
+States mirror the parameter sharding (axes tree reused), so optimizer
+memory scales down with FSDP exactly like params do.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros_like(p, dtype=F32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(F32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(F32) * scale).astype(g.dtype),
+                        grads), gnorm
+
+
+def adamw_update(grads, opt_state, params, cfg: AdamWConfig, lr=None):
+    """Returns (new_params, new_opt_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    count = opt_state["count"] + 1
+    lr = cfg.lr if lr is None else lr
+    b1c = 1.0 - cfg.b1 ** count.astype(F32)
+    b2c = 1.0 - cfg.b2 ** count.astype(F32)
+
+    def upd(g, mu, nu, p):
+        g = g.astype(F32)
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+        mhat = mu / b1c
+        nhat = nu / b2c
+        step = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        new_p = p.astype(F32) - lr * (step + cfg.weight_decay * p.astype(F32))
+        return new_p.astype(p.dtype), mu, nu
+
+    flat, treedef = jax.tree.flatten(params)
+    gflat = treedef.flatten_up_to(grads)
+    muflat = treedef.flatten_up_to(opt_state["mu"])
+    nuflat = treedef.flatten_up_to(opt_state["nu"])
+    out = [upd(g, m, n, p) for g, m, n, p in zip(gflat, muflat, nuflat, flat)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_params, {"mu": new_mu, "nu": new_nu, "count": count}, \
+        {"grad_norm": gnorm}

@@ -1,0 +1,105 @@
+"""Fault tolerance + straggler mitigation (paper §4.6, framework plane).
+
+The paper's engines handle failures with timeouts (pending moves
+re-requested), restarts (compute-component failure => restart elsewhere)
+and replication (dirty data ACKed by >1 memory component). The training
+framework mirrors those at its own granularity:
+
+  * restart      — `run_with_restarts` restores the latest checkpoint and
+                   resumes (potentially on a different mesh: elastic);
+  * timeouts     — `StepWatchdog` bounds per-step wall time; a blown
+                   deadline raises, which the restart loop absorbs;
+  * stragglers   — `StragglerDetector` tracks a robust step-time median;
+                   persistent outliers trigger a `should_reshard` signal
+                   (on real fleets: evict the slow host, shrink the mesh —
+                   the elastic restore path above makes that a restart);
+  * replication  — checkpoint `keep>=2` + atomic rename is the storage
+                   analogue of dual-ACK dirty writes.
+"""
+from __future__ import annotations
+
+import logging
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+log = logging.getLogger("repro.fault")
+
+
+class StepTimeout(RuntimeError):
+    pass
+
+
+@dataclass
+class StepWatchdog:
+    deadline_s: float = 600.0
+
+    def check(self, step_seconds: float, step: int):
+        if step_seconds > self.deadline_s:
+            raise StepTimeout(
+                f"step {step} took {step_seconds:.1f}s > "
+                f"{self.deadline_s:.1f}s deadline")
+
+
+@dataclass
+class StragglerDetector:
+    """Robust step-time tracker: flags persistent k x median outliers."""
+    factor: float = 3.0
+    patience: int = 3
+    window: int = 50
+    _times: List[float] = field(default_factory=list)
+    _strikes: int = 0
+
+    def observe(self, step_seconds: float) -> bool:
+        """Returns True when a re-shard/restart is advised."""
+        self._times.append(step_seconds)
+        self._times = self._times[-self.window:]
+        if len(self._times) < 10:
+            return False
+        med = sorted(self._times)[len(self._times) // 2]
+        if step_seconds > self.factor * med:
+            self._strikes += 1
+        else:
+            self._strikes = 0
+        if self._strikes >= self.patience:
+            log.warning("straggler: %d consecutive steps > %.1fx median",
+                        self._strikes, self.factor)
+            return True
+        return False
+
+    @property
+    def median(self) -> Optional[float]:
+        if not self._times:
+            return None
+        return sorted(self._times)[len(self._times) // 2]
+
+
+def run_with_restarts(make_state: Callable[[], tuple],
+                      run_from: Callable[[object, int], None],
+                      ckpt_mgr,
+                      max_failures: int = 3,
+                      fault_hook: Optional[Callable[[int], None]] = None):
+    """Restart loop: (re)build state, restore latest checkpoint, run.
+
+    `make_state()` -> (template_state, start_step);
+    `run_from(state, step)` runs until completion or raises.
+    `fault_hook(attempt)` lets tests inject failures deterministically.
+    Returns the number of restarts consumed.
+    """
+    failures = 0
+    while True:
+        template, start = make_state()
+        restored, step, _ = ckpt_mgr.restore(template)
+        state = restored if restored is not None else template
+        step = step if step is not None else start
+        try:
+            if fault_hook is not None:
+                fault_hook(failures)
+            run_from(state, step)
+            return failures
+        except Exception as e:  # noqa: BLE001 — restart-able by design
+            failures += 1
+            log.warning("failure %d/%d at step >=%s: %r", failures,
+                        max_failures, step, e)
+            if failures > max_failures:
+                raise

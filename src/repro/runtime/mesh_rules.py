@@ -1,0 +1,166 @@
+"""Logical-axis -> mesh-axis sharding rules with divisibility fallback.
+
+Params and activations are annotated with *logical* axis names; this module
+maps them to ``PartitionSpec``s for a concrete mesh. A mesh axis is dropped
+for a dimension whenever (a) it is absent from the mesh, (b) the dim size is
+not divisible by the (remaining) mesh-axis product, or (c) the axis was
+already consumed by an earlier dimension of the same tensor. This is what
+makes every (arch x shape) cell shardable on the production mesh: e.g.
+``batch=1`` over ``data=16`` falls back to replication instead of failing.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# logical axis -> preferred mesh axes (in priority order; prefix-droppable)
+DEFAULT_RULES = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": (),                       # training activations: seq replicated
+    "seq_sp": ("model",),            # Megatron-SP residuals (§Perf it5)
+    "kv_seq": ("model",),            # decode KV cache: sequence-parallel
+    "long_seq": ("data", "model"),   # long-context decode: shard seq harder
+    # weights
+    "fsdp": ("data",),               # ZeRO-3 style weight sharding over data
+    "tensor": ("model",),            # tensor parallel dim
+    "tensor_kv": ("model",),
+    "experts": ("model",),           # expert parallel
+    "vocab": ("model",),
+    "layers": (),                    # stacked-scan layer dim: never sharded
+    None: (),
+}
+
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def logical_to_pspec(axes: Sequence[Optional[str]],
+                     shape: Sequence[int],
+                     mesh: Mesh,
+                     rules=None) -> PartitionSpec:
+    """Map logical axes for a tensor of `shape` to a PartitionSpec on `mesh`."""
+    rules = rules or DEFAULT_RULES
+    assert len(axes) == len(shape), (axes, shape)
+    used: set = set()
+    spec = []
+    for dim, logical in zip(shape, axes):
+        mesh_axes = rules.get(logical, ())
+        # keep only axes present in this mesh and not already used
+        cand = [a for a in mesh_axes if a in mesh.shape and a not in used]
+        # drop axes (from the right: least-preferred first) until divisible
+        while cand and dim % math.prod(axis_size(mesh, a) for a in cand) != 0:
+            cand.pop()
+        if not cand:
+            spec.append(None)
+        else:
+            used.update(cand)
+            spec.append(tuple(cand) if len(cand) > 1 else cand[0])
+    # trim trailing Nones (canonical form)
+    while spec and spec[-1] is None:
+        spec.pop()
+    return PartitionSpec(*spec)
+
+
+def named_sharding(axes, shape, mesh, rules=None) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_pspec(axes, shape, mesh, rules))
+
+
+def tree_pspecs(axes_tree, shape_tree, mesh, rules=None):
+    """Map a pytree of logical-axes tuples + matching ShapeDtypeStructs/arrays
+    to a pytree of PartitionSpecs."""
+    def one(axes, arr):
+        return logical_to_pspec(axes, arr.shape, mesh, rules)
+    return jax.tree.map(one, axes_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(a, (str, type(None))) for a in x))
+
+
+def tree_shardings(axes_tree, shape_tree, mesh, rules=None):
+    def one(axes, arr):
+        return named_sharding(axes, arr.shape, mesh, rules)
+    return jax.tree.map(one, axes_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(a, (str, type(None))) for a in x))
+
+
+_ACTIVE_MESH: list = []  # stack managed by use_mesh(); read at trace time
+
+
+class use_mesh:
+    """Context manager: make `mesh` the framework's active mesh.
+
+    ``constrain`` consults this stack at trace time; a no-op when empty
+    (pure-CPU smoke tests trace with no mesh and no constraints).
+    """
+
+    def __init__(self, mesh: Mesh):
+        self.mesh = mesh
+
+    def __enter__(self):
+        _ACTIVE_MESH.append(self.mesh)
+        self._jax_ctx = self.mesh
+        self._jax_ctx.__enter__()
+        return self.mesh
+
+    def __exit__(self, *exc):
+        _ACTIVE_MESH.pop()
+        return self._jax_ctx.__exit__(*exc)
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH[-1] if _ACTIVE_MESH else None
+
+
+_RULE_OVERRIDES: list = []
+
+
+class rule_override:
+    """Temporarily override logical->mesh rules during tracing (e.g. the
+    compressed-DP path maps "batch" to data only: the pod axis is handled
+    by an explicit vmap there, not by GSPMD batch sharding)."""
+
+    def __init__(self, updates: dict):
+        self.updates = updates
+
+    def __enter__(self):
+        merged = dict(_RULE_OVERRIDES[-1] if _RULE_OVERRIDES
+                      else DEFAULT_RULES)
+        merged.update(self.updates)
+        _RULE_OVERRIDES.append(merged)
+        return merged
+
+    def __exit__(self, *exc):
+        _RULE_OVERRIDES.pop()
+        return False
+
+
+def current_rules():
+    return _RULE_OVERRIDES[-1] if _RULE_OVERRIDES else DEFAULT_RULES
+
+
+def constrain(x, axes, rules=None):
+    """with_sharding_constraint against the active mesh, with fallback rules.
+
+    No-op when no mesh is active, so model code can be written once and run
+    both in distributed (dry-run/production) and single-device (smoke) modes.
+    """
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    pspec = logical_to_pspec(axes, x.shape, mesh, rules or current_rules())
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, pspec))
+
+
+def dp_axis_names(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes that carry data parallelism (gradient reduction axes)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def num_chips(mesh: Mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

@@ -1,0 +1,71 @@
+"""Serving loop: batched autoregressive decode with greedy/temperature
+sampling, optional DaeMon paged-KV movement accounting.
+
+`serve_batch` drives `decode_step` (prefill via teacher-forced forward on
+the prompt, then token-by-token with the layer-stacked cache). This is the
+entry the `decode_*` dry-run cells lower; examples/serve_paged.py runs it
+on a reduced config and reports the DaemonKVStore byte ledger.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.model import (ModelOptions, decode_step,
+                                init_decode_state)
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0          # 0 => greedy
+    seed: int = 0
+
+
+def make_decode_fn(cfg: ArchConfig, opt: ModelOptions):
+    @jax.jit
+    def step(params, state, tokens, pos, key, temperature):
+        logits, state = decode_step(params, cfg, state, tokens, pos, opt)
+        logits = logits[:, : cfg.vocab_size]
+        greedy = jnp.argmax(logits, axis=-1)
+        sampled = jax.random.categorical(
+            key, logits / jnp.maximum(temperature, 1e-4), axis=-1)
+        nxt = jnp.where(temperature > 0, sampled, greedy).astype(jnp.int32)
+        return nxt[:, None], state
+    return step
+
+
+def serve_batch(params, cfg: ArchConfig, prompts, scfg: ServeConfig,
+                opt: ModelOptions = None):
+    """prompts: (B, P) int32. Returns (B, P + max_new_tokens) tokens.
+
+    Prefill is run token-by-token through the same decode cell (exact, and
+    exercises every recurrent family uniformly); production prefill for
+    attention archs uses models.model.prefill (one pass) — both paths are
+    tested for equivalence.
+    """
+    opt = opt or ModelOptions(remat="none")
+    b, p = prompts.shape
+    max_len = p + scfg.max_new_tokens
+    state, _ = init_decode_state(cfg, b, max_len, opt)
+    step = make_decode_fn(cfg, opt)
+    key = jax.random.PRNGKey(scfg.seed)
+    out = [prompts]
+    tok = prompts[:, :1]
+    # prefill: feed prompt tokens
+    for i in range(p):
+        key, sub = jax.random.split(key)
+        nxt, state = step(params, state, prompts[:, i:i + 1], jnp.int32(i),
+                          sub, jnp.float32(scfg.temperature))
+    tok = nxt
+    gen = []
+    for i in range(scfg.max_new_tokens):
+        gen.append(tok)
+        key, sub = jax.random.split(key)
+        tok, state = step(params, state, tok, jnp.int32(p + i), sub,
+                          jnp.float32(scfg.temperature))
+    return jnp.concatenate(out + gen, axis=1)

@@ -1,0 +1,141 @@
+"""Train step construction: grad accumulation, two DP-sync modes, AdamW.
+
+DP-sync modes (the framework-level DaeMon experiment):
+
+* ``none``  — paper-faithful *Remote analogue*: the batch is sharded over
+  (pod, data); autodiff's implicit f32 all-reduce carries gradient traffic
+  across the inter-pod link at full width (bulk page-granularity movement).
+* ``int8``  — *DaeMon link compression applied to the pod link*: per-pod
+  partial gradients are computed via vmap over a pod-major batch dim, block-
+  int8 quantized, exchanged with an int8 all-gather over the pod axis, and
+  dequant-combined. Collective bytes on the slow link drop ~4x (visible in
+  the dry-run HLO; EXPERIMENTS.md §Perf).
+
+Grad accumulation runs pod-locally; the link is crossed once per step —
+the same "don't stall the critical path behind bulk traffic" budgeting the
+paper's queue controller enforces.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.compression import (dequantize_block_int8,
+                                    quantize_block_int8)
+from repro.models.model import ModelOptions, loss_fn
+from repro.optim.adamw import AdamWConfig, adamw_update
+from repro.optim.schedule import cosine_schedule
+from repro.runtime.mesh_rules import constrain, rule_override
+
+F32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    adamw: AdamWConfig = AdamWConfig()
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    dp_compress: str = "none"        # "none" | "int8"
+    quant_block: int = 256
+    num_pods: int = 1                # pod-major batch splitting for "int8"
+
+
+def _reshape_micro(batch, n_micro: int):
+    def r(x):
+        b = x.shape[0]
+        return x.reshape((n_micro, b // n_micro) + x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def _accum_grads(loss_and_grad, params, micro_batch, n_micro):
+    """lax.scan over microbatches, f32 grad accumulation."""
+
+    def body(carry, mb):
+        acc, loss_acc = carry
+        (loss, metrics), grads = loss_and_grad(params, mb)
+        acc = jax.tree.map(lambda a, g: a + g.astype(F32), acc, grads)
+        return (acc, loss_acc + loss), metrics
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+    (grads, loss_sum), metrics = jax.lax.scan(
+        body, (zeros, jnp.zeros((), F32)), micro_batch)
+    grads = jax.tree.map(lambda g: g / n_micro, grads)
+    return grads, loss_sum / n_micro, metrics
+
+
+def _compressed_pod_sync(grads_stack, num_pods: int, block: int):
+    """grads_stack: pytree with leading (num_pods,) dim sharded over `pod`.
+
+    int8-quantize each pod's partial grads, force replication (-> int8
+    all-gather over the pod link), dequantize and average locally.
+    """
+
+    def sync(g):
+        # quantize each pod's partial grads separately (blocks never
+        # straddle the pod dim)
+        q, scale = jax.vmap(lambda gg: quantize_block_int8(gg, block))(g)
+        # crossing the slow link: int8 payload + f32 scales, not f32 grads
+        q = constrain(q, (None, None, None))             # all-gather (int8)
+        scale = constrain(scale, (None, None))
+        per_pod = g.shape[1:]
+        deq = jax.vmap(lambda qq, ss: dequantize_block_int8(
+            qq, ss, per_pod, block))(q, scale)
+        return jnp.mean(deq, axis=0)
+
+    return jax.tree.map(sync, grads_stack)
+
+
+def make_train_step(cfg: ArchConfig, opt: ModelOptions, tcfg: TrainConfig):
+    """Returns train_step(params, opt_state, batch, step) -> (p, o, metrics)."""
+    n_micro = max(1, cfg.grad_accum_microbatches)
+
+    def loss_and_grad(params, mb):
+        return jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, mb, opt), has_aux=True)(params)
+
+    def train_step(params, opt_state, batch, step):
+        lr = cosine_schedule(step, peak_lr=tcfg.adamw.lr,
+                             warmup_steps=tcfg.warmup_steps,
+                             total_steps=tcfg.total_steps)
+        if tcfg.dp_compress == "int8" and tcfg.num_pods > 1:
+            pods = tcfg.num_pods
+            pod_batch = jax.tree.map(
+                lambda x: x.reshape((pods, x.shape[0] // pods)
+                                    + x.shape[1:]), batch)
+
+            def pod_grads(pb):
+                micro = _reshape_micro(pb, n_micro)
+                g, loss, _ = _accum_grads(loss_and_grad, params, micro,
+                                          n_micro)
+                return g, loss
+
+            # vmap over pods with spmd_axis_name: the mapped dim shards
+            # over "pod" and inner constraints get the pod prefix; inside,
+            # "batch" must map to data only (pod is the vmapped dim)
+            with rule_override({"batch": ("data",)}):
+                grads_stack, losses = jax.vmap(
+                    pod_grads, spmd_axis_name="pod")(pod_batch)
+            grads = _compressed_pod_sync(grads_stack, pods, tcfg.quant_block)
+            loss = jnp.mean(losses)
+        else:
+            micro = _reshape_micro(batch, n_micro)
+            grads, loss, _ = _accum_grads(loss_and_grad, params, micro,
+                                          n_micro)
+        new_params, new_opt, om = adamw_update(grads, opt_state, params,
+                                               tcfg.adamw, lr=lr)
+        metrics = {"loss": loss, "lr": lr, **om}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig, opt: ModelOptions):
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, cfg, batch, opt)
+        return {"loss": loss, **metrics}
+    return eval_step

@@ -1,0 +1,3 @@
+from repro.sim.workloads import WORKLOADS, WorkloadParams
+from repro.sim.schemes import SCHEMES, SchemeFlags
+from repro.sim.desim import simulate_grid, SimConfig

@@ -1,0 +1,354 @@
+"""Request-level discrete-event simulator of a fully disaggregated system.
+
+The paper evaluates with a heavily modified Sniper; the reproducible
+equivalent on a CPU-only box is a request-level DES replaying LLC-miss
+traces through: local memory (set-assoc, LRU/FIFO), the DaeMon engines
+(inflight buffers + selection unit from ``repro.core.engine``), partitioned
+virtual channels over the network and the remote-memory bus
+(``repro.core.bandwidth`` semantics), link compression, and an MLP-window
+core model. One `lax.scan` step per request; one jit per scheme (flags are
+static python — each scheme is its own compiled program).
+
+Fidelity notes (vs the paper's cycle-accurate setup) are in DESIGN.md.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import (EngineState, init_engine_state, find,
+                               retire_arrivals, schedule_line, schedule_page,
+                               select_granularity)
+from repro.core.params import DaemonParams, NetworkParams
+from repro.sim.schemes import SchemeFlags
+from repro.sim.trace import Trace
+
+F32 = jnp.float32
+BIG = jnp.float32(3.0e38)
+WAYS = 8
+MLP_W = 16
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    daemon: DaemonParams = DaemonParams()
+    local_frac: float = 0.20      # local memory holds ~20% of the footprint
+    fifo: bool = False            # FIFO instead of LRU (fig 16)
+    num_mc: int = 1               # memory components (fig 17/22)
+    mlp: int = MLP_W
+
+
+class SimState(NamedTuple):
+    t: jnp.ndarray
+    ring: jnp.ndarray            # (W,) outstanding completions
+    tbl_page: jnp.ndarray        # (SETS, WAYS) int32
+    tbl_age: jnp.ndarray        # (SETS, WAYS) f32
+    tbl_valid: jnp.ndarray       # (SETS, WAYS) f32 (page arrival time)
+    tbl_dirty: jnp.ndarray       # (SETS, WAYS) bool
+    eng: EngineState
+    ch_line: jnp.ndarray         # (M,) net line-channel busy-until
+    ch_page: jnp.ndarray         # (M,) net page/shared-channel busy-until
+    mem_line: jnp.ndarray        # (M,) remote-memory bus channels
+    mem_page: jnp.ndarray        # (M,)
+    ch_rev: jnp.ndarray          # (M,) writeback channel (accounting)
+    stats: dict
+
+
+STAT_KEYS = ("i", "n", "hits", "lat_sum", "pages_moved", "lines_moved",
+             "net_bytes", "wb_bytes", "served_line", "served_page",
+             "page_drops", "dirty_evicts")
+
+
+def _init_state(cfg: SimConfig, n_pages: int) -> SimState:
+    cap = max(WAYS, int(n_pages * cfg.local_frac))
+    sets = max(1, cap // WAYS)
+    m = cfg.num_mc
+    z = lambda: jnp.zeros((m,), F32)
+    return SimState(
+        t=jnp.zeros((), F32),
+        ring=jnp.zeros((cfg.mlp,), F32),
+        tbl_page=jnp.full((sets, WAYS), -1, jnp.int32),
+        tbl_age=jnp.zeros((sets, WAYS), F32),
+        tbl_valid=jnp.full((sets, WAYS), BIG, F32),
+        tbl_dirty=jnp.zeros((sets, WAYS), bool),
+        eng=init_engine_state(cfg.daemon),
+        ch_line=z(), ch_page=z(), mem_line=z(), mem_page=z(), ch_rev=z(),
+        stats={k: jnp.zeros((), F32) for k in STAT_KEYS},
+    )
+
+
+def _occupy(busy, t_ready, nbytes, bw, gate):
+    """Serialize nbytes on a busy-until channel iff gate."""
+    start = jnp.maximum(t_ready, busy)
+    dur = nbytes / jnp.maximum(bw, 1e-6)
+    done = start + dur
+    return jnp.where(gate, done, busy), done
+
+
+def _gate_tree(gate, old, new):
+    return jax.tree.map(lambda a, b: jnp.where(gate, b, a), old, new)
+
+
+def make_step(flags: SchemeFlags, cfg: SimConfig):
+    """Per-request transition for one scheme (flags static)."""
+    dp = cfg.daemon
+    comp_lat = dp.compress_latency_ns
+    line_b = float(dp.line_bytes)
+    page_b = float(dp.page_bytes)
+    m = cfg.num_mc
+    ratio = flags.bw_ratio
+    line_share = ratio if flags.partition else 1.0
+    page_share = (1.0 - ratio) if flags.partition else 1.0
+    want_page = (flags.move_pages or flags.page_free) and flags.use_local_mem
+
+    def step(st: SimState, inp):
+        page, off, gap, wr, net, comp_ratio = inp
+        sets = st.tbl_page.shape[0]
+
+        # ---- core issue (MLP window) ----
+        oldest = jnp.min(st.ring)
+        slot = jnp.argmin(st.ring)
+        t_issue = jnp.maximum(st.t + gap, oldest)
+
+        # ---- local memory lookup ----
+        set_idx = page % sets
+        row = st.tbl_page[set_idx]
+        hit_vec = row == page
+        present = jnp.any(hit_vec)
+        way = jnp.argmax(hit_vec)
+        valid_t = st.tbl_valid[set_idx, way]
+        is_hit = present & (valid_t <= t_issue) & flags.use_local_mem
+        if flags.local_only:
+            is_hit = jnp.bool_(True)
+        inflight_tbl = present & (valid_t > t_issue)
+
+        eng = retire_arrivals(st.eng, t_issue)
+
+        # ---- engine decision (§4.2) ----
+        send_line, send_page = select_granularity(
+            eng, page, t_issue, selection_enabled=flags.selection,
+            always_both=not flags.selection)
+        page_found, pidx = find(eng.page_key, page)
+        pending_arrival = jnp.where(page_found, eng.page_arrival[pidx], BIG)
+        send_page = send_page & want_page & ~is_hit & ~inflight_tbl
+        send_line = send_line & flags.move_lines & ~is_hit
+        if not flags.move_pages and not flags.page_free:
+            send_line = ~is_hit        # line-only scheme: always fetch
+        if flags.local_only:
+            send_line = jnp.bool_(False)
+            send_page = jnp.bool_(False)
+
+        mc = page % m
+        bw = net["bw"][mc] * net["bw_mult"]
+        sw = net["switch"][mc]
+        membw = net["membw"]
+        t0 = t_issue + sw + net["trans_lat"] + net["remote_lat"]
+
+        # ---- channels: partitioned virtual channels or one shared FIFO
+        if flags.partition:
+            line_mem_busy, page_mem_busy = st.mem_line[mc], st.mem_page[mc]
+            line_net_busy, page_net_busy = st.ch_line[mc], st.ch_page[mc]
+        else:
+            line_mem_busy = page_mem_busy = st.mem_page[mc]
+            line_net_busy = page_net_busy = st.ch_page[mc]
+
+        # ---- line path: mem bus read then net transfer ----
+        lm_busy, lm_done = _occupy(line_mem_busy, t0, line_b,
+                                   membw * line_share, send_line)
+        if not flags.partition:
+            page_mem_busy = lm_busy    # shared FIFO: page sees line's use
+        ln_busy, ln_done = _occupy(line_net_busy, lm_done, line_b,
+                                   bw * line_share, send_line)
+        if not flags.partition:
+            page_net_busy = ln_busy
+        line_arrival = jnp.where(send_line, ln_done + sw, BIG)
+
+        # ---- page path ----
+        wire_b = page_b / comp_ratio if flags.compress else page_b
+        move_page_physically = send_page & ~jnp.bool_(flags.page_free)
+        pm_busy, pm_done = _occupy(page_mem_busy, t0, page_b,
+                                   membw * page_share,
+                                   move_page_physically)
+        pn_ready = pm_done + (comp_lat if flags.compress else 0.0)
+        pn_busy, pn_done = _occupy(page_net_busy, pn_ready, wire_b,
+                                   bw * page_share, move_page_physically)
+        # "issued" (left the page queue) = network transmission start —
+        # until then a later line request can still win the race (§4.2)
+        pn_start = pn_done - wire_b / jnp.maximum(bw * page_share, 1e-6)
+        decomp = comp_lat if flags.compress else 0.0
+        page_arrival = jnp.where(move_page_physically,
+                                 pn_done + sw + decomp, BIG)
+        if flags.page_free:
+            # page materializes at the cost of one line-granularity access
+            free_t = (t_issue + 2 * sw + net["trans_lat"]
+                      + net["remote_lat"] + line_b / bw + line_b / membw)
+            page_arrival = jnp.where(send_page, free_t, BIG)
+
+        # ---- serve time ----
+        cand = jnp.minimum(jnp.minimum(line_arrival, page_arrival),
+                           pending_arrival)
+        untracked = (t_issue + 2 * sw + net["trans_lat"]
+                     + net["remote_lat"] + line_b / (bw * line_share)
+                     + line_b / (membw * line_share))
+        cand = jnp.where(cand >= BIG / 2, untracked, cand)
+        done = jnp.where(is_hit, t_issue + net["local_lat"], cand)
+
+        # ---- engine bookkeeping (gated insertions) ----
+        if want_page:
+            eng = _gate_tree(send_page, eng,
+                             schedule_page(eng, page, pn_start,
+                                           page_arrival))
+        if flags.move_lines:
+            eng = _gate_tree(send_line, eng,
+                             schedule_line(eng, page, off, line_arrival))
+
+        # ---- local table update (insert page at LRU/FIFO victim) ----
+        do_insert = send_page & flags.use_local_mem
+        victim = jnp.argmin(st.tbl_age[set_idx])
+        evict_page = st.tbl_page[set_idx, victim]
+        evict_dirty = st.tbl_dirty[set_idx, victim] & (evict_page >= 0)
+        wb = do_insert & evict_dirty
+        wb_bytes = jnp.where(wb, wire_b, 0.0)
+        rev_busy, _ = _occupy(st.ch_rev[mc], t_issue, wire_b, bw, wb)
+
+        def upd(tbl, val, gate, w):
+            return tbl.at[set_idx, w].set(
+                jnp.where(gate, val, tbl[set_idx, w]))
+
+        tbl_page = upd(st.tbl_page, page, do_insert, victim)
+        tbl_valid = upd(st.tbl_valid, page_arrival, do_insert, victim)
+        tbl_dirty = upd(st.tbl_dirty, wr, do_insert, victim)
+        tbl_age = upd(st.tbl_age, t_issue, do_insert, victim)
+        if not cfg.fifo:               # LRU refreshes on hit
+            tbl_age = upd(tbl_age, t_issue, is_hit & present, way)
+        tbl_dirty = upd(tbl_dirty, tbl_dirty[set_idx, way] | wr,
+                        is_hit & present, way)
+
+        # ---- stats (warmup-gated: first `warm_after` requests excluded
+        # from latency/hit accounting; total_time still covers the run) ----
+        warm = st.stats["i"] >= net["warm_after"]
+        lat = jnp.where(warm, done - t_issue, 0.0)
+        served_line = (~is_hit) & (line_arrival <= jnp.minimum(
+            page_arrival, pending_arrival))
+        # paper's fig-10 metric: tag-present accesses count as local-memory
+        # hits (burst followers of an inflight page are served from local
+        # memory once it lands); the triggering first touch is a miss.
+        # Latency accounting is unaffected.
+        stat_hit = is_hit | inflight_tbl
+        stt = st.stats
+        stats = {
+            "i": stt["i"] + 1.0,
+            "n": stt["n"] + warm,
+            "hits": stt["hits"] + (stat_hit & warm),
+            "lat_sum": stt["lat_sum"] + lat,
+            "pages_moved": stt["pages_moved"] + move_page_physically,
+            "lines_moved": stt["lines_moved"] + send_line,
+            "net_bytes": stt["net_bytes"] + wb_bytes
+            + jnp.where(move_page_physically, wire_b, 0.0)
+            + jnp.where(send_line, line_b, 0.0),
+            "wb_bytes": stt["wb_bytes"] + wb_bytes,
+            "served_line": stt["served_line"] + served_line,
+            "served_page": stt["served_page"] + ((~is_hit) & ~served_line),
+            "page_drops": stt["page_drops"] + (
+                (~is_hit) & ~send_page & ~page_found & ~inflight_tbl
+                & jnp.bool_(want_page)),
+            "dirty_evicts": stt["dirty_evicts"] + wb,
+        }
+
+        new_st = SimState(
+            t=t_issue,
+            ring=st.ring.at[slot].set(done),
+            tbl_page=tbl_page, tbl_age=tbl_age, tbl_valid=tbl_valid,
+            tbl_dirty=tbl_dirty, eng=eng,
+            ch_line=(st.ch_line.at[mc].set(ln_busy) if flags.partition
+                     else st.ch_line),
+            ch_page=st.ch_page.at[mc].set(pn_busy),
+            mem_line=(st.mem_line.at[mc].set(lm_busy) if flags.partition
+                      else st.mem_line),
+            mem_page=st.mem_page.at[mc].set(pm_busy),
+            ch_rev=st.ch_rev.at[mc].set(rev_busy),
+            stats=stats,
+        )
+        return new_st, done
+
+    return step
+
+
+def simulate_one(flags: SchemeFlags, cfg: SimConfig, n_pages: int,
+                 warm_frac: float, trace_arrays, net, comp_ratio):
+    """Run one scheme over one (trace, net) point. Returns metrics dict."""
+    st = _init_state(cfg, n_pages)
+    step = make_step(flags, cfg)
+    page, off, gap, wr, bw_mult = trace_arrays
+    r = page.shape[0]
+    xs = (page, off, gap, wr,
+          {"bw": jnp.broadcast_to(net["bw"], (r,) + net["bw"].shape),
+           "switch": jnp.broadcast_to(net["switch"],
+                                      (r,) + net["switch"].shape),
+           "membw": jnp.broadcast_to(net["membw"], (r,)),
+           "local_lat": jnp.broadcast_to(net["local_lat"], (r,)),
+           "remote_lat": jnp.broadcast_to(net["remote_lat"], (r,)),
+           "trans_lat": jnp.broadcast_to(net["trans_lat"], (r,)),
+           "warm_after": jnp.broadcast_to(
+               jnp.asarray(warm_frac * r, F32), (r,)),
+           "bw_mult": bw_mult},
+          jnp.broadcast_to(jnp.asarray(comp_ratio, F32), (r,)))
+    final, _ = jax.lax.scan(step, st, xs)
+    total_time = jnp.maximum(jnp.max(final.ring), final.t)
+    s = final.stats
+    misses = jnp.maximum(s["n"] - s["hits"], 1.0)
+    return {
+        "total_time_ns": total_time,
+        "avg_miss_ns": s["lat_sum"] / misses,
+        "avg_access_ns": s["lat_sum"] / jnp.maximum(s["n"], 1.0),
+        "hit_ratio": s["hits"] / jnp.maximum(s["n"], 1.0),
+        "pages_moved": s["pages_moved"],
+        "lines_moved": s["lines_moved"],
+        "net_bytes": s["net_bytes"],
+        "page_drops": s["page_drops"],
+        "bw_util": s["net_bytes"] / jnp.maximum(
+            total_time * net["bw"][0], 1e-6),
+    }
+
+
+def simulate_grid(scheme_flags: SchemeFlags, cfg: SimConfig, trace: Trace,
+                  nets, comp_ratio: float, bw_mult=None,
+                  warm_frac: float = 0.3):
+    """One scheme x one trace over a list of network configs.
+
+    The network axis is vmapped: one compile, all configs vectorized.
+    """
+    r = len(trace.page)
+    if bw_mult is None:
+        bw_mult = np.ones(r, np.float32)
+    arrays = (jnp.asarray(trace.page), jnp.asarray(trace.off),
+              jnp.asarray(trace.gap), jnp.asarray(trace.wr),
+              jnp.asarray(bw_mult, F32))
+    stacked = {k: jnp.stack([jnp.asarray(n[k], F32) for n in nets])
+               for k in nets[0]}
+    fn = jax.jit(jax.vmap(
+        partial(simulate_one, scheme_flags, cfg, trace.n_pages, warm_frac),
+        in_axes=(None, 0, None)))
+    res = fn(arrays, stacked, jnp.asarray(comp_ratio, F32))
+    return [{k: float(v[i]) for k, v in res.items()}
+            for i in range(len(nets))]
+
+
+def make_net(p: NetworkParams, num_mc: int = 1, bw_factors=None,
+             switches=None) -> dict:
+    bw_factors = bw_factors or [p.bw_factor] * num_mc
+    switches = switches or [p.switch_latency_ns] * num_mc
+    return {
+        "bw": np.asarray([p.dram_bw_gbps / f for f in bw_factors],
+                         np.float32),
+        "switch": np.asarray(switches, np.float32),
+        "membw": np.float32(p.dram_bw_gbps),
+        "local_lat": np.float32(p.local_mem_latency_ns),
+        "remote_lat": np.float32(p.remote_mem_latency_ns),
+        "trans_lat": np.float32(p.translation_latency_ns),
+    }

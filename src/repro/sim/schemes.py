@@ -1,0 +1,54 @@
+"""The evaluated data-movement schemes (paper §2.2 fig 3 + §6).
+
+  Local      — monolithic: every access served from local memory
+  cache-line — lines only, straight to LLC, no local-memory use
+  Remote     — page-granularity only (the widely-adopted baseline)
+  page-free  — line-latency serve + page materializes at zero cost (upper
+               bound from fig 3)
+  cl+page    — naive both granularities on ONE shared FIFO link
+  LC         — Remote + ratio-optimized link compression (§4.4)
+  BP         — decoupled dual-granularity + 25% bandwidth partitioning,
+               ALWAYS both (no selection) (§4.1)
+  PQ         — BP + selection granularity unit (§4.2), no compression
+  DaeMon     — PQ + LC (the full design)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class SchemeFlags:
+    name: str
+    local_only: bool = False     # Local
+    move_lines: bool = True
+    move_pages: bool = True
+    page_free: bool = False
+    partition: bool = False      # dual virtual channels (else shared FIFO)
+    selection: bool = False      # §4.2 selection granularity unit
+    compress: bool = False       # §4.4 link compression on pages
+    use_local_mem: bool = True   # cache-line scheme: False
+    bw_ratio: float = 0.25
+
+
+SCHEMES = {
+    "local": SchemeFlags("local", local_only=True),
+    "cache-line": SchemeFlags("cache-line", move_pages=False,
+                              use_local_mem=False),
+    "remote": SchemeFlags("remote", move_lines=False),
+    "page-free": SchemeFlags("page-free", page_free=True),
+    "cl+page": SchemeFlags("cl+page", partition=False),
+    "lc": SchemeFlags("lc", move_lines=False, compress=True),
+    "bp": SchemeFlags("bp", partition=True),
+    "pq": SchemeFlags("pq", partition=True, selection=True),
+    "daemon": SchemeFlags("daemon", partition=True, selection=True,
+                          compress=True),
+}
+
+PAPER_FIG3 = ("local", "cache-line", "remote", "page-free", "cl+page",
+              "daemon")
+PAPER_FIG8 = ("remote", "lc", "bp", "pq", "daemon", "local")
+
+
+def with_ratio(flags: SchemeFlags, ratio: float) -> SchemeFlags:
+    return replace(flags, bw_ratio=ratio)

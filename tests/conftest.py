@@ -1,0 +1,11 @@
+import os
+import sys
+from pathlib import Path
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests must see 1 CPU device.
+# Multi-device tests run via subprocess (tests/test_distributed.py).
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")

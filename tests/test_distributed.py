@@ -1,0 +1,26 @@
+"""Multi-device tests via subprocess (8 forced host CPU devices).
+
+A subprocess is required because XLA locks the device count at first jax
+init — the main pytest process must keep seeing 1 device for the smoke
+tests (see conftest.py).
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+SCRIPT = Path(__file__).resolve().parent / "_distributed_checks.py"
+
+
+def _run(which: str):
+    r = subprocess.run([sys.executable, str(SCRIPT), which],
+                       capture_output=True, text=True, timeout=1200)
+    assert r.returncode == 0, f"{which} failed:\n{r.stdout}\n{r.stderr}"
+    assert "PASSED" in r.stdout
+
+
+@pytest.mark.parametrize("which", ["moe", "compress", "pipeline",
+                                   "sharded"])
+def test_distributed(which):
+    _run(which)

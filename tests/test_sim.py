@@ -1,0 +1,128 @@
+"""Simulator behavior: scheme sanity orderings + conservation + paper
+regime checks on short traces (full aggregates live in benchmarks/)."""
+import numpy as np
+import pytest
+
+from repro.core.params import NetworkParams
+from repro.sim.desim import SimConfig, make_net, simulate_grid
+from repro.sim.schemes import SCHEMES
+from repro.sim.trace import generate_trace, merge_traces
+from repro.sim.workloads import WORKLOADS
+
+R = 15000
+
+
+@pytest.fixture(scope="module")
+def results():
+    out = {}
+    net = [make_net(NetworkParams(bw_factor=4.0, switch_latency_ns=100.0))]
+    for wl in ("pr", "dr"):
+        w = WORKLOADS[wl]
+        tr = generate_trace(w, R, seed=7)
+        out[wl] = {
+            s: simulate_grid(SCHEMES[s], SimConfig(), tr, net,
+                             w.comp_ratio)[0]
+            for s in ("local", "remote", "page-free", "lc", "pq", "daemon",
+                      "cache-line")}
+    return out
+
+
+def test_local_is_fastest(results):
+    for wl, res in results.items():
+        t_local = res["local"]["total_time_ns"]
+        for s, r in res.items():
+            assert t_local <= r["total_time_ns"] * 1.001, (wl, s)
+
+
+def test_page_free_close_to_local(results):
+    """fig3: page-free ~= Local (within 1.4x on short traces)."""
+    for wl, res in results.items():
+        ratio = (res["page-free"]["total_time_ns"]
+                 / res["local"]["total_time_ns"])
+        assert ratio < 1.4, (wl, ratio)
+
+
+def test_daemon_beats_remote_on_poor_locality(results):
+    r = results["pr"]
+    assert r["daemon"]["total_time_ns"] < r["remote"]["total_time_ns"]
+
+
+def test_daemon_marginal_on_incompressible_high_locality(results):
+    """dr: paper reports only 1.05x — daemon must be within [0.85, 1.6]."""
+    r = results["dr"]
+    spd = r["remote"]["total_time_ns"] / r["daemon"]["total_time_ns"]
+    assert 0.85 < spd < 1.6, spd
+
+
+def test_lc_beats_remote_when_compressible(results):
+    r = results["pr"]
+    assert r["lc"]["total_time_ns"] < r["remote"]["total_time_ns"]
+
+
+def test_remote_moves_only_pages(results):
+    for wl, res in results.items():
+        assert res["remote"]["lines_moved"] == 0
+        assert res["remote"]["pages_moved"] > 0
+        assert res["cache-line"]["pages_moved"] == 0
+        assert res["cache-line"]["lines_moved"] > 0
+
+
+def test_hit_ratio_regimes(results):
+    """High-locality workloads hit >= 90% under Remote (paper fig 10)."""
+    assert results["dr"]["remote"]["hit_ratio"] > 0.90
+    assert results["pr"]["remote"]["hit_ratio"] > 0.80
+
+
+def test_conservation_every_request_served(results):
+    """Latency accounting: avg miss latency positive and finite; bytes
+    moved are consistent with page/line counts."""
+    for wl, res in results.items():
+        for s, r in res.items():
+            if s == "local":
+                continue
+            assert np.isfinite(r["avg_access_ns"])
+            assert r["avg_access_ns"] > 0
+            expected_min = (r["pages_moved"] * 4096 / 6.0
+                            + r["lines_moved"] * 64)
+            if s not in ("page-free",):
+                assert r["net_bytes"] >= expected_min * 0.9, (wl, s)
+
+
+def test_compression_reduces_wire_bytes(results):
+    for wl in ("pr",):
+        res = results[wl]
+        assert res["daemon"]["net_bytes"] < res["pq" if "pq" in res else
+                                               "remote"]["net_bytes"] * 1.05
+
+
+def test_fifo_mode_runs():
+    w = WORKLOADS["bf"]
+    tr = generate_trace(w, 5000, seed=3)
+    net = [make_net(NetworkParams())]
+    r = simulate_grid(SCHEMES["daemon"], SimConfig(fifo=True), tr, net,
+                      w.comp_ratio)[0]
+    assert np.isfinite(r["total_time_ns"])
+
+
+def test_multi_mc_improves_remote():
+    """fig17: more memory components -> more aggregate bandwidth."""
+    w = WORKLOADS["pr"]
+    tr = generate_trace(w, 15000, seed=5)
+    one = simulate_grid(SCHEMES["remote"], SimConfig(num_mc=1), tr,
+                        [make_net(NetworkParams(), 1)], w.comp_ratio)[0]
+    four = simulate_grid(SCHEMES["remote"], SimConfig(num_mc=4), tr,
+                         [make_net(NetworkParams(), 4)], w.comp_ratio)[0]
+    assert four["total_time_ns"] < one["total_time_ns"]
+
+
+def test_trace_determinism_and_merge():
+    w = WORKLOADS["kc"]
+    t1 = generate_trace(w, 2000, seed=11)
+    t2 = generate_trace(w, 2000, seed=11)
+    np.testing.assert_array_equal(t1.page, t2.page)
+    np.testing.assert_array_equal(t1.gap, t2.gap)
+    t3 = generate_trace(w, 2000, seed=12)
+    assert not np.array_equal(t1.page, t3.page)
+    merged = merge_traces([t1, t3], seed=1)
+    assert merged.n_pages == t1.n_pages + t3.n_pages
+    assert len(merged.page) == 4000

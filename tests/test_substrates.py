@@ -1,0 +1,251 @@
+"""Substrate tests: data pipeline, optimizer, checkpoint, sharding rules,
+fault tolerance, serving loop, KV store."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, get_shape
+from repro.configs.base import SMOKE_SHAPES
+
+
+# ------------------------------------------------------------------ data
+def test_data_determinism_and_shapes():
+    from repro.data.pipeline import DataConfig, synthetic_batch
+    cfg = get_config("yi-9b").reduced()
+    shape = SMOKE_SHAPES["smoke_train"]
+    b1 = synthetic_batch(cfg, shape, DataConfig(seed=1), step=5)
+    b2 = synthetic_batch(cfg, shape, DataConfig(seed=1), step=5)
+    b3 = synthetic_batch(cfg, shape, DataConfig(seed=1), step=6)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+    assert b1["tokens"].shape == (shape.global_batch, shape.seq_len)
+    assert int(b1["tokens"].max()) < cfg.vocab_size
+
+
+def test_data_vlm_frontend_present():
+    from repro.data.pipeline import DataConfig, synthetic_batch
+    cfg = get_config("internvl2-26b").reduced()
+    b = synthetic_batch(cfg, SMOKE_SHAPES["smoke_train"], DataConfig(), 0)
+    assert b["frontend"].shape == (2, cfg.frontend_tokens, cfg.d_model)
+
+
+# ----------------------------------------------------------------- optim
+def test_adamw_matches_numpy_reference():
+    from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+    cfg = AdamWConfig(lr=1e-2, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0,
+                      grad_clip=1e9)
+    p = {"w": jnp.asarray([1.0, -2.0, 3.0])}
+    g = {"w": jnp.asarray([0.1, 0.2, -0.3])}
+    s = adamw_init(p)
+    p2, s2, _ = adamw_update(g, s, p, cfg)
+    # numpy reference, one step
+    gw = np.asarray([0.1, 0.2, -0.3])
+    mu = 0.1 * gw
+    nu = 0.01 * gw ** 2
+    mhat = mu / (1 - 0.9)
+    nhat = nu / (1 - 0.99)
+    ref = np.asarray([1.0, -2.0, 3.0]) - 1e-2 * mhat / (np.sqrt(nhat)
+                                                        + 1e-8)
+    np.testing.assert_allclose(np.asarray(p2["w"]), ref, rtol=1e-5)
+
+
+def test_grad_clip_global_norm():
+    from repro.optim.adamw import clip_by_global_norm
+    g = {"a": jnp.ones((4,)) * 3.0, "b": jnp.ones((9,)) * 4.0 * 0 + 4.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    total = math.sqrt(sum(float(jnp.sum(x ** 2))
+                          for x in jax.tree.leaves(clipped)))
+    assert abs(total - 1.0) < 1e-5
+    assert float(norm) > 1.0
+
+
+def test_cosine_schedule_shape():
+    from repro.optim.schedule import cosine_schedule
+    lr0 = cosine_schedule(jnp.asarray(0), peak_lr=1e-3, warmup_steps=10,
+                          total_steps=100)
+    lr_peak = cosine_schedule(jnp.asarray(10), peak_lr=1e-3,
+                              warmup_steps=10, total_steps=100)
+    lr_end = cosine_schedule(jnp.asarray(100), peak_lr=1e-3,
+                             warmup_steps=10, total_steps=100)
+    assert float(lr0) == 0.0
+    assert abs(float(lr_peak) - 1e-3) < 1e-9
+    assert float(lr_end) == pytest.approx(1e-4, rel=1e-3)
+
+
+# ------------------------------------------------------------ checkpoint
+def test_checkpoint_roundtrip_and_retention(tmp_path):
+    from repro.checkpoint import CheckpointConfig, CheckpointManager
+    mgr = CheckpointManager(CheckpointConfig(str(tmp_path), keep=2,
+                                             async_save=False))
+    state = {"w": jnp.arange(6.0).reshape(2, 3),
+             "opt": {"mu": jnp.ones((4,)), "count": jnp.int32(7)}}
+    for step in (10, 20, 30):
+        mgr.save(step, jax.tree.map(lambda x: x + step, state),
+                 extra={"data_step": step * 2})
+    assert mgr.all_steps() == [20, 30]  # retention
+    restored, step, extra = mgr.restore(state)
+    assert step == 30 and extra["data_step"] == 60
+    np.testing.assert_allclose(np.asarray(restored["w"]),
+                               np.asarray(state["w"]) + 30)
+    assert int(restored["opt"]["count"]) == 37
+
+
+def test_checkpoint_atomicity_ignores_tmp(tmp_path):
+    from repro.checkpoint import CheckpointConfig, CheckpointManager
+    mgr = CheckpointManager(CheckpointConfig(str(tmp_path),
+                                             async_save=False))
+    state = {"w": jnp.ones((2,))}
+    mgr.save(5, state)
+    (tmp_path / "step_9.tmp").mkdir()          # simulated crash debris
+    assert mgr.latest_step() == 5
+    restored, step, _ = mgr.restore(state)
+    assert step == 5
+
+
+def test_checkpoint_async(tmp_path):
+    from repro.checkpoint import CheckpointConfig, CheckpointManager
+    mgr = CheckpointManager(CheckpointConfig(str(tmp_path),
+                                             async_save=True))
+    mgr.save(1, {"w": jnp.zeros((8,))})
+    mgr.wait()
+    assert mgr.latest_step() == 1
+
+
+# -------------------------------------------------------------- sharding
+def test_logical_to_pspec_divisibility_fallback():
+    import jax.sharding
+    from repro.runtime.mesh_rules import logical_to_pspec
+
+    class FakeMesh:
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    mesh = FakeMesh()
+    # batch 256 shards over pod x data
+    ps = logical_to_pspec(("batch", None), (256, 128), mesh)
+    assert ps == jax.sharding.PartitionSpec(("pod", "data"))
+    # batch 1 -> fully replicated
+    ps = logical_to_pspec(("batch", None), (1, 128), mesh)
+    assert ps == jax.sharding.PartitionSpec()
+    # batch 32: divisible by pod*data=32
+    ps = logical_to_pspec(("batch",), (32,), mesh)
+    assert ps == jax.sharding.PartitionSpec(("pod", "data"))
+    # kv heads 4 cannot shard over model=16 -> replicated dim
+    ps = logical_to_pspec(("fsdp", "tensor_kv", None), (4096, 4, 128), mesh)
+    assert ps == jax.sharding.PartitionSpec("data")
+    # same mesh axis never used twice
+    ps = logical_to_pspec(("tensor", "vocab"), (64, 6400), mesh)
+    assert ps in (jax.sharding.PartitionSpec("model"),)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 512), st.integers(1, 512))
+def test_pspec_always_divides(a, b):
+    """Property: whatever sizes arrive, the pspec evenly divides them."""
+    import jax.sharding
+    from repro.runtime.mesh_rules import logical_to_pspec
+
+    class FakeMesh:
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    ps = logical_to_pspec(("batch", "tensor"), (a, b), FakeMesh())
+    sizes = {"pod": 2, "data": 16, "model": 16}
+    dims = list(ps) + [None] * (2 - len(list(ps)))
+    for dim_size, spec in zip((a, b), dims):
+        if spec is None:
+            continue
+        axes = spec if isinstance(spec, tuple) else (spec,)
+        prod = math.prod(sizes[x] for x in axes)
+        assert dim_size % prod == 0
+
+
+# ----------------------------------------------------------------- fault
+def test_straggler_detector():
+    from repro.runtime.fault import StragglerDetector
+    det = StragglerDetector(factor=3.0, patience=3)
+    flagged = False
+    for _ in range(20):
+        flagged |= det.observe(1.0)
+    assert not flagged
+    for _ in range(2):
+        assert not det.observe(10.0)
+    assert det.observe(10.0)  # third strike
+
+
+def test_run_with_restarts_resumes_from_checkpoint(tmp_path):
+    from repro.checkpoint import CheckpointConfig, CheckpointManager
+    from repro.runtime.fault import run_with_restarts
+    mgr = CheckpointManager(CheckpointConfig(str(tmp_path),
+                                             async_save=False))
+    progress = []
+
+    def make_state():
+        return {"x": jnp.zeros(())}, 0
+
+    def run_from(state, step):
+        x = float(state["x"])
+        for s in range(step, 10):
+            x += 1.0
+            if s == 4 and not progress:
+                # checkpoint labels the NEXT step to run (s+1 done-through)
+                mgr.save(s + 1, {"x": jnp.asarray(x)})
+                progress.append("crashed")
+                raise RuntimeError("injected node failure")
+        progress.append(("done", x))
+
+    failures = run_with_restarts(make_state, run_from, mgr,
+                                 max_failures=2)
+    assert failures == 1
+    done = [p for p in progress if isinstance(p, tuple)][0]
+    assert done[1] == 10.0  # resumed from step 4 with x=5, +5 more
+
+
+def test_watchdog_raises():
+    from repro.runtime.fault import StepTimeout, StepWatchdog
+    wd = StepWatchdog(deadline_s=1.0)
+    wd.check(0.5, 1)
+    with pytest.raises(StepTimeout):
+        wd.check(2.0, 2)
+
+
+# ------------------------------------------------------------- kv store
+def test_daemon_kv_store_hits_and_bytes():
+    from repro.core.daemon_store import (KVStoreConfig, init_kv_store,
+                                         step_fetch)
+    cfg = KVStoreConfig(num_local_pages=4, page_tokens=8, kv_heads=2,
+                        head_dim=64, page_budget_per_step=8)
+    state = init_kv_store(cfg)
+    key = jax.random.PRNGKey(0)
+    remote_k = jax.random.normal(key, (16, 8, 2, 64), jnp.float32)
+    remote_v = jax.random.normal(jax.random.fold_in(key, 1),
+                                 (16, 8, 2, 64), jnp.float32)
+    need = jnp.asarray([3, 5], jnp.int32)
+    state, k, v, hit = step_fetch(state, cfg, remote_k, remote_v, need)
+    assert not bool(hit.any())              # cold start: all misses
+    np.testing.assert_allclose(np.asarray(k), np.asarray(remote_k[need]))
+    # pages scheduled; after enough steps they land and hit locally
+    for _ in range(4):
+        state, k, v, hit = step_fetch(state, cfg, remote_k, remote_v, need)
+    assert bool(hit.all()), "pages should have landed in the local pool"
+    st = state.stats
+    assert float(st["wire_bytes"]) < float(st["uncompressed_bytes"])
+    assert float(st["local_hits"]) >= 2
+
+
+# -------------------------------------------------------------- serving
+def test_serve_batch_greedy_deterministic():
+    from repro.models.model import ModelOptions, init_model
+    from repro.runtime.serve_loop import ServeConfig, serve_batch
+    cfg = get_config("qwen3-1.7b").reduced()
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    prompts = jnp.asarray([[2, 17, 9, 4]], jnp.int32)
+    out1 = serve_batch(params, cfg, prompts, ServeConfig(max_new_tokens=6))
+    out2 = serve_batch(params, cfg, prompts, ServeConfig(max_new_tokens=6))
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert out1.shape == (1, 10)
+    assert int(out1.max()) < cfg.vocab_size
