@@ -8,7 +8,7 @@ from pathlib import Path
 import numpy as np
 
 from repro.core.params import NetworkParams
-from repro.sim.desim import SimConfig, make_net, simulate_grid
+from repro.sim.desim import SimConfig, make_net, simulate_lattice
 from repro.sim.schemes import SCHEMES, with_ratio
 from repro.sim.trace import Trace, generate_trace, merge_traces
 from repro.sim.workloads import ORDER, WORKLOADS
@@ -26,7 +26,9 @@ NETWORK_GRID = [(sw, bf) for sw in (100.0, 400.0) for bf in (2.0, 4.0, 8.0)]
 def get_trace(wl: str, r: int = None, seed: int = 1) -> Trace:
     r = r or TRACE_R
     w = WORKLOADS[wl]
-    key = CACHE / f"{wl}_{r}_{seed}.npz"
+    # v2: crc32 trace seeding (process-stable) — the version token keeps
+    # caches written by the old salted-hash() generator from being reused
+    key = CACHE / f"{wl}_{r}_{seed}_v2.npz"
     if key.exists():
         z = np.load(key)
         return Trace(z["page"], z["off"], z["gap"], z["wr"],
@@ -44,19 +46,25 @@ def nets_for(pairs) -> list:
 
 def run_grid(workloads, scheme_names, net_pairs, r=None,
              cfg: SimConfig = None, ratio=None):
-    """-> {wl: {scheme: [metrics per net]}} over the given grid."""
+    """-> {wl: {scheme: [metrics per net]}} over the given grid.
+
+    All schemes x all nets per workload run as ONE `simulate_lattice`
+    call — a single compiled program per trace shape, vmapped over both
+    axes, instead of one compile per (scheme, workload)."""
     cfg = cfg or SimConfig()
     nets = nets_for(net_pairs)
     out = {}
     for wl in workloads:
         tr = get_trace(wl, r)
         w = WORKLOADS[wl]
-        out[wl] = {}
+        flag_list = []
         for s in scheme_names:
             flags = SCHEMES[s]
             if ratio is not None and s in ("bp", "pq", "daemon"):
                 flags = with_ratio(flags, ratio)
-            out[wl][s] = simulate_grid(flags, cfg, tr, nets, w.comp_ratio)
+            flag_list.append(flags)
+        res = simulate_lattice(flag_list, cfg, tr, nets, w.comp_ratio)
+        out[wl] = dict(zip(scheme_names, res))
     return out
 
 

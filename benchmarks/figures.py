@@ -23,7 +23,7 @@ from benchmarks.common import (NETWORK_GRID, SCHEMES, WORKLOADS, ORDER,
                                csv_print, geomean, get_trace, nets_for,
                                run_grid, speedup_table, TRACE_R)
 from repro.core.params import NetworkParams
-from repro.sim.desim import SimConfig, make_net, simulate_grid
+from repro.sim.desim import SimConfig, make_net, simulate_lattice
 from repro.sim.schemes import with_ratio
 from repro.sim.trace import merge_traces
 from repro.sim.workloads import POOR, MEDIUM, HIGH
@@ -107,22 +107,40 @@ def fig10_hit_ratio(r=None, grid=None):
 
 
 def fig11_bw_ratio(r=None):
-    ratios = (0.25, 0.50, 0.80)
+    # the paper sweeps {25,50,80}%; the single-compile lattice makes the
+    # sweep cheap enough to widen to 8 ratios on the same compiled program
+    ratios = (0.10, 0.20, 0.25, 0.40, 0.50, 0.65, 0.80, 0.90)
     subset = ("pr", "nw", "bf", "ts", "sl", "rs")
     nets = [(100.0, 4.0), (400.0, 4.0)]
-    rows = []
-    agg = {}
+    # one scheme axis: remote baseline + (pq, daemon) per ratio — the whole
+    # ratio sweep is one lattice point set, not one run_grid per ratio
+    flag_list = [SCHEMES["remote"]]
     for ratio in ratios:
-        grid = run_grid(subset, ("remote", "pq", "daemon"), nets, r,
-                        ratio=ratio)
-        spd = speedup_table(grid)
-        for wl in subset:
+        flag_list += [with_ratio(SCHEMES["pq"], ratio),
+                      with_ratio(SCHEMES["daemon"], ratio)]
+    rows = []
+    spds = {ratio: [] for ratio in ratios}
+    pq_rows = {}
+    for wl in subset:
+        tr = get_trace(wl, r)
+        w = WORKLOADS[wl]
+        res = simulate_lattice(flag_list, SimConfig(), tr, nets_for(nets),
+                               w.comp_ratio)
+        base = res[0]
+        for k, ratio in enumerate(ratios):
+            pq, dm = res[1 + 2 * k], res[2 + 2 * k]
             for i, (sw, bf) in enumerate(nets):
-                rows.append([wl, int(sw), ratio,
-                             round(spd[wl]["pq"][i], 3),
-                             round(spd[wl]["daemon"][i], 3)])
-        agg[ratio] = geomean([spd[wl]["daemon"][i] for wl in subset
-                              for i in range(len(nets))])
+                s_pq = base[i]["total_time_ns"] / pq[i]["total_time_ns"]
+                s_dm = base[i]["total_time_ns"] / dm[i]["total_time_ns"]
+                pq_rows[(wl, ratio, i)] = (sw, s_pq, s_dm)
+                spds[ratio].append(s_dm)
+    for k, ratio in enumerate(ratios):
+        for wl in subset:
+            for i in range(len(nets)):
+                sw, s_pq, s_dm = pq_rows[(wl, ratio, i)]
+                rows.append([wl, int(sw), ratio, round(s_pq, 3),
+                             round(s_dm, 3)])
+    agg = {ratio: geomean(v) for ratio, v in spds.items()}
     csv_print("fig11 bandwidth partitioning ratio (paper: 25% best on avg)",
               ["workload", "switch_ns", "ratio", "pq", "daemon"], rows)
     print(f"# daemon geomean by ratio: "
@@ -146,9 +164,9 @@ def fig12_compression(r=None):
             w = WORKLOADS[wl]
             cr = getattr(w, ratio_attr)
             nn = nets_for(nets)
-            base = simulate_grid(SCHEMES["remote"], cfg, tr, nn,
-                                 w.comp_ratio)
-            lc = simulate_grid(SCHEMES["lc"], cfg, tr, nn, cr)
+            # per-scheme comp_ratio on the lattice's scheme axis
+            base, lc = simulate_lattice([SCHEMES["remote"], SCHEMES["lc"]],
+                                        cfg, tr, nn, [w.comp_ratio, cr])
             for i in range(len(nets)):
                 s = base[i]["total_time_ns"] / lc[i]["total_time_ns"]
                 rows.append([wl, name, nets[i][1], round(s, 3)])
@@ -173,10 +191,10 @@ def fig13_disturbance(r=None):
         tr = get_trace(wl, r)
         w = WORKLOADS[wl]
         nets = nets_for([(100.0, 4.0)])
-        out = {}
-        for s in ("remote", "lc", "pq", "daemon"):
-            out[s] = simulate_grid(SCHEMES[s], SimConfig(), tr, nets,
-                                   w.comp_ratio, bw_mult=phases)[0]
+        names = ("remote", "lc", "pq", "daemon")
+        res = simulate_lattice([SCHEMES[s] for s in names], SimConfig(),
+                               tr, nets, w.comp_ratio, bw_mult=phases)
+        out = {s: res[i][0] for i, s in enumerate(names)}
         for s in ("lc", "pq", "daemon"):
             rows.append([wl, s, round(out["remote"]["total_time_ns"]
                                       / out[s]["total_time_ns"], 3),
@@ -198,10 +216,9 @@ def fig15_multithreaded(r=None):
         tr = tr._replace(gap=tr.gap / 8.0)   # 8 cores issuing concurrently
         w = WORKLOADS[wl]
         nets = nets_for([(100.0, 4.0), (100.0, 8.0)])
-        base = simulate_grid(SCHEMES["remote"], SimConfig(mlp=32), tr, nets,
-                             w.comp_ratio)
-        dm = simulate_grid(SCHEMES["daemon"], SimConfig(mlp=32), tr, nets,
-                           w.comp_ratio)
+        base, dm = simulate_lattice([SCHEMES["remote"], SCHEMES["daemon"]],
+                                    SimConfig(mlp=32), tr, nets,
+                                    w.comp_ratio)
         for i, (sw, bf) in enumerate([(100, 4), (100, 8)]):
             s = base[i]["total_time_ns"] / dm[i]["total_time_ns"]
             rows.append([wl, bf, round(s, 3)])
@@ -220,9 +237,9 @@ def fig16_fifo(r=None):
         tr = get_trace(wl, r)
         w = WORKLOADS[wl]
         nets = nets_for([(100.0, 4.0), (400.0, 4.0)])
-        base = simulate_grid(SCHEMES["remote"], cfg, tr, nets, w.comp_ratio)
-        dm = simulate_grid(SCHEMES["daemon"], cfg, tr, nets, w.comp_ratio)
-        loc = simulate_grid(SCHEMES["local"], cfg, tr, nets, w.comp_ratio)
+        base, dm, loc = simulate_lattice(
+            [SCHEMES["remote"], SCHEMES["daemon"], SCHEMES["local"]],
+            cfg, tr, nets, w.comp_ratio)
         for i in range(2):
             s = base[i]["total_time_ns"] / dm[i]["total_time_ns"]
             rows.append([wl, [100, 400][i], round(s, 3),
@@ -259,12 +276,10 @@ def fig17_multi_mc(r=None):
         for wl in ("pr", "bf", "sl"):
             tr = get_trace(wl, r)
             w = WORKLOADS[wl]
-            base = simulate_grid(SCHEMES["remote"], cfg, tr, net,
-                                 w.comp_ratio)[0]
-            dm = simulate_grid(SCHEMES["daemon"], cfg, tr, net,
-                               w.comp_ratio)[0]
-            loc = simulate_grid(SCHEMES["local"], cfg, tr, net,
-                                w.comp_ratio)[0]
+            res = simulate_lattice(
+                [SCHEMES["remote"], SCHEMES["daemon"], SCHEMES["local"]],
+                cfg, tr, net, w.comp_ratio)
+            base, dm, loc = (res[0][0], res[1][0], res[2][0])
             s = base["total_time_ns"] / dm["total_time_ns"]
             rows.append([mcname, wl, round(s, 3),
                          round(loc["total_time_ns"] / dm["total_time_ns"],
@@ -291,8 +306,9 @@ def fig18_multi_workload(r=None):
         cfg = SimConfig(local_frac=0.15 if len(combo) == 2 else 0.09,
                         mlp=16 * len(combo))
         nets = nets_for([(100.0, 4.0)])
-        base = simulate_grid(SCHEMES["remote"], cfg, merged, nets, cr)[0]
-        dm = simulate_grid(SCHEMES["daemon"], cfg, merged, nets, cr)[0]
+        res = simulate_lattice([SCHEMES["remote"], SCHEMES["daemon"]],
+                               cfg, merged, nets, cr)
+        base, dm = res[0][0], res[1][0]
         s = base["total_time_ns"] / dm["total_time_ns"]
         rows.append(["+".join(combo), round(s, 3)])
         spds.append(s)
@@ -303,39 +319,38 @@ def fig18_multi_workload(r=None):
 
 
 def fig20_switch_latency(r=None):
-    rows = []
-    for sw in (100.0, 200.0, 400.0, 700.0, 1000.0):
-        spds = []
-        for wl in ORDER:
-            tr = get_trace(wl, r)
-            w = WORKLOADS[wl]
-            nets = nets_for([(sw, 4.0)])
-            base = simulate_grid(SCHEMES["remote"], SimConfig(), tr, nets,
-                                 w.comp_ratio)[0]
-            dm = simulate_grid(SCHEMES["daemon"], SimConfig(), tr, nets,
-                               w.comp_ratio)[0]
-            spds.append(base["total_time_ns"] / dm["total_time_ns"])
-        rows.append([int(sw), round(geomean(spds), 3)])
+    sws = (100.0, 200.0, 400.0, 700.0, 1000.0)
+    spds = {sw: [] for sw in sws}
+    for wl in ORDER:                   # whole sweep = one lattice call
+        tr = get_trace(wl, r)
+        w = WORKLOADS[wl]
+        nets = nets_for([(sw, 4.0) for sw in sws])
+        base, dm = simulate_lattice([SCHEMES["remote"], SCHEMES["daemon"]],
+                                    SimConfig(), tr, nets, w.comp_ratio)
+        for i, sw in enumerate(sws):
+            spds[sw].append(base[i]["total_time_ns"]
+                            / dm[i]["total_time_ns"])
+    rows = [[int(sw), round(geomean(spds[sw]), 3)] for sw in sws]
     csv_print("fig20 switch-latency sweep (paper: 1.49x at 1000ns)",
               ["switch_ns", "daemon_speedup_geomean"], rows)
     return {"rows": rows}
 
 
 def fig21_bw_factor(r=None):
-    rows = []
-    for bf in (2.0, 4.0, 8.0, 16.0):
-        spds = []
-        for wl in ("pr", "nw", "bf", "sl", "rs"):
-            tr = get_trace(wl, r)
-            tr = tr._replace(gap=tr.gap / 8.0)  # multithreaded pressure
-            w = WORKLOADS[wl]
-            nets = nets_for([(100.0, bf)])
-            base = simulate_grid(SCHEMES["remote"], SimConfig(mlp=32), tr,
-                                 nets, w.comp_ratio)[0]
-            dm = simulate_grid(SCHEMES["daemon"], SimConfig(mlp=32), tr,
-                               nets, w.comp_ratio)[0]
-            spds.append(base["total_time_ns"] / dm["total_time_ns"])
-        rows.append([int(bf), round(geomean(spds), 3)])
+    bfs = (2.0, 4.0, 8.0, 16.0)
+    spds = {bf: [] for bf in bfs}
+    for wl in ("pr", "nw", "bf", "sl", "rs"):
+        tr = get_trace(wl, r)
+        tr = tr._replace(gap=tr.gap / 8.0)  # multithreaded pressure
+        w = WORKLOADS[wl]
+        nets = nets_for([(100.0, bf) for bf in bfs])
+        base, dm = simulate_lattice([SCHEMES["remote"], SCHEMES["daemon"]],
+                                    SimConfig(mlp=32), tr, nets,
+                                    w.comp_ratio)
+        for i, bf in enumerate(bfs):
+            spds[bf].append(base[i]["total_time_ns"]
+                            / dm[i]["total_time_ns"])
+    rows = [[int(bf), round(geomean(spds[bf]), 3)] for bf in bfs]
     csv_print("fig21 bw-factor sweep, multithreaded (paper: 3.95x at 1/16)",
               ["bw_factor", "daemon_speedup_geomean"], rows)
     return {"rows": rows}

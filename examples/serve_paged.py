@@ -6,6 +6,12 @@ migrations + adaptive selection) and once Remote-style (uncompressed
 page-only movement), and reports wire bytes + hit ratios — the serving
 analogue of paper fig 8/19.
 
+The store's movement plane is the same `repro.core.engine` selection +
+inflight machinery the simulator uses: a miss whose page is already
+inflight and issued rides the in-flight page instead of re-fetching its
+critical token every step (§4.2 race rule), so sub-block counts reflect
+line-plane traffic, not raw miss counts.
+
   PYTHONPATH=src python examples/serve_paged.py
 """
 import sys

@@ -8,15 +8,16 @@
 #                 plane + compressed page plane + adaptive selection)
 # params.py       hardware constants from paper Table 1/2
 from repro.core.bandwidth import (Channel, PartitionedLink, init_channel,
-                                  init_link, send_line, send_page, transmit)
+                                  init_link, occupy_busy, send_line,
+                                  send_page, serve_dual, shares, transmit)
 from repro.core.compression import (dequantize_block_int4,
                                     dequantize_block_int8, ef_compress,
                                     quantize_block_int4,
                                     quantize_block_int8)
 from repro.core.engine import (INVALID, MOVED, SCHEDULED, THROTTLED,
-                               EngineState, find, first_free,
+                               EngineState, find, first_free, gate_tree,
                                init_engine_state, note_dirty_eviction,
-                               retire_arrivals, schedule_line,
-                               schedule_page, select_granularity,
-                               utilization)
+                               poll_arrivals, retire_arrivals,
+                               schedule_line, schedule_page,
+                               select_granularity, utilization)
 from repro.core.params import DaemonParams, NetworkParams

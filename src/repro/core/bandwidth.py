@@ -8,6 +8,21 @@ un-partitioned schemes share one channel FIFO — which is precisely how
 critical lines end up stalled behind 4KB pages.
 
 Both the network link and the remote-memory bus are partitioned (§4.1).
+
+This module is the ONLY place busy-until channel arithmetic lives:
+
+  * `occupy_busy`  — raw gated serialization on one busy-until clock;
+  * `serve_dual`   — one dual-granularity service step on a physical link,
+                     with a *traceable* partitioned-vs-shared-FIFO switch
+                     (the simulator's per-request transition and every
+                     scheme in the lattice run through it);
+  * `Channel`/`PartitionedLink` — the scalar NamedTuple API used by the
+                     property tests and standalone analyses.
+
+The simulator keeps one busy-until clock per memory component (an (M,)
+array per virtual channel) and passes the scalar `busy[mc]` slice here;
+`serve_dual` works unchanged for traced `partition`/`ratio`/`gate` values,
+which is what makes a single compiled program serve every scheme.
 """
 from __future__ import annotations
 
@@ -16,6 +31,62 @@ from typing import NamedTuple, Tuple
 import jax.numpy as jnp
 
 F32 = jnp.float32
+
+
+# ----------------------------------------------------- busy-until arithmetic
+def occupy_busy(busy, t_ready, nbytes, bw, *, gate=True
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Serialize `nbytes` on a raw busy-until clock iff `gate`.
+
+    Returns (new_busy, done). `done` is computed unconditionally (callers
+    gate arrival times themselves); `new_busy` only advances when gated in
+    — so an un-sent transfer leaves the channel untouched.
+    """
+    start = jnp.maximum(t_ready, busy)
+    done = start + nbytes / jnp.maximum(bw, 1e-6)
+    return jnp.where(gate, done, busy), done
+
+
+def shares(partition, ratio) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(line_share, page_share) of the physical bandwidth (§4.1).
+
+    Partitioned links split `ratio` / `1 - ratio`; a shared FIFO serves
+    either granularity at full bandwidth. Traceable in both arguments.
+    """
+    line = jnp.where(partition, ratio, 1.0).astype(F32)
+    page = jnp.where(partition, 1.0 - ratio, 1.0).astype(F32)
+    return line, page
+
+
+def serve_dual(line_busy, page_busy, *, partition, ratio, bw,
+               line_ready, line_bytes, line_gate,
+               page_ready, page_bytes, page_gate
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                          jnp.ndarray]:
+    """One dual-granularity service step on a physical link (§4.1).
+
+    partition=True: two independent virtual channels — the line channel
+    owns `ratio x bw`, the page channel the rest. partition=False: one
+    shared FIFO whose clock lives in `page_busy` (the line is served first
+    at full bandwidth and the page queues behind it — exactly how critical
+    lines and bulk pages interfere without DaeMon); `line_busy` is left
+    untouched so un-partitioned schemes keep a dormant line channel.
+
+    All of `partition`, `ratio` and the gates may be traced values: the
+    shared/partitioned split is a `where`, not a Python branch, so one
+    compiled program serves every scheme in a lattice sweep.
+
+    Returns (line_busy', page_busy', line_done, page_done).
+    """
+    line_share, page_share = shares(partition, ratio)
+    line_in = jnp.where(partition, line_busy, page_busy)
+    lb, line_done = occupy_busy(line_in, line_ready, line_bytes,
+                                bw * line_share, gate=line_gate)
+    page_in = jnp.where(partition, page_busy, lb)
+    pb, page_done = occupy_busy(page_in, page_ready, page_bytes,
+                                bw * page_share, gate=page_gate)
+    new_line = jnp.where(partition, lb, line_busy)
+    return new_line, pb, line_done, page_done
 
 
 class Channel(NamedTuple):
@@ -29,17 +100,16 @@ def init_channel() -> Channel:
 def transmit(ch: Channel, t_ready, nbytes, bw_bytes_per_ns
              ) -> Tuple[Channel, jnp.ndarray]:
     """Serialize `nbytes` on the channel; returns (channel, done_time)."""
-    start = jnp.maximum(t_ready, ch.busy_until)
-    done = start + nbytes / bw_bytes_per_ns
-    return Channel(busy_until=done), done
+    new_busy, done = occupy_busy(ch.busy_until, t_ready, nbytes,
+                                 bw_bytes_per_ns)
+    return Channel(busy_until=new_busy), done
 
 
 def occupy(ch: Channel, t_ready, nbytes, bw_bytes_per_ns, *, gate=True
            ) -> Tuple[Channel, jnp.ndarray]:
     """transmit() that can be disabled (gate=False -> state unchanged)."""
-    start = jnp.maximum(t_ready, ch.busy_until)
-    done = start + nbytes / bw_bytes_per_ns
-    new_busy = jnp.where(gate, done, ch.busy_until)
+    new_busy, done = occupy_busy(ch.busy_until, t_ready, nbytes,
+                                 bw_bytes_per_ns, gate=gate)
     return Channel(busy_until=new_busy), jnp.where(gate, done, t_ready)
 
 

@@ -12,6 +12,15 @@ transfers accounted by the movement planner). Per decode step the engine:
      bandwidth budget (bw_ratio-partitioned, int8-compressed — §4.1/§4.4),
   4. adapts granularity to the inflight-buffer occupancies (§4.2).
 
+The inflight-buffer + selection machinery is NOT reimplemented here: the
+store embeds a ``repro.core.engine.EngineState`` and routes every decision
+through ``select_granularity`` / ``schedule_page`` / ``schedule_line`` /
+``poll_arrivals`` / ``retire_arrivals`` — the same primitives the
+simulator's per-request transition uses, so the serving path and the
+simulator cannot diverge on movement semantics by construction (the clock
+is the decode-step counter instead of nanoseconds; pages are issued on
+schedule and arrive after their partitioned-budget service steps).
+
 All state is a pytree; `step_fetch` is jit/scan-friendly. The byte ledger
 (`stats`) is what examples/serve_paged.py reports against the Remote
 (page-only) baseline.
@@ -24,6 +33,10 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import (EngineState, gate_tree as _gate_tree,
+                               init_engine_state, poll_arrivals,
+                               retire_arrivals, schedule_line,
+                               schedule_page, select_granularity)
 from repro.core.params import DaemonParams
 from repro.kernels import ops
 
@@ -39,6 +52,7 @@ class KVStoreConfig:
     daemon: DaemonParams = DaemonParams()
     compress_pages: bool = True   # int8 link compression on page moves
     page_budget_per_step: int = 4  # page-plane slots per decode step
+    selection: bool = True        # §4.2 adaptive granularity (else both)
 
 
 class KVStoreState(NamedTuple):
@@ -48,23 +62,21 @@ class KVStoreState(NamedTuple):
     # local page table: remote page id resident in each slot (-1 empty)
     slot_page: jnp.ndarray        # (N,) int32
     slot_age: jnp.ndarray         # (N,) f32 (LRU clock)
-    # inflight page buffer (paper: 256-entry CAM)
-    inflight_page: jnp.ndarray    # (P,) int32
-    inflight_left: jnp.ndarray    # (P,) i32 — budget steps until arrival
+    # shared DaeMon movement plane (inflight page + sub-block CAMs, §4.2)
+    eng: EngineState
     clock: jnp.ndarray            # scalar step counter
     stats: dict
 
 
 def init_kv_store(cfg: KVStoreConfig) -> KVStoreState:
-    n, p = cfg.num_local_pages, cfg.daemon.inflight_page_buf
+    n = cfg.num_local_pages
     shape = (n, cfg.page_tokens, cfg.kv_heads, cfg.head_dim)
     return KVStoreState(
         kpool=jnp.zeros(shape, jnp.bfloat16),
         vpool=jnp.zeros(shape, jnp.bfloat16),
         slot_page=jnp.full((n,), -1, jnp.int32),
         slot_age=jnp.zeros((n,), F32),
-        inflight_page=jnp.full((p,), -1, jnp.int32),
-        inflight_left=jnp.zeros((p,), jnp.int32),
+        eng=init_engine_state(cfg.daemon),
         clock=jnp.zeros((), F32),
         stats={k: jnp.zeros((), F32) for k in
                ("sub_block_fetches", "page_moves", "wire_bytes",
@@ -80,35 +92,42 @@ def _wire_bytes(cfg: KVStoreConfig, tokens: int, compressed: bool) -> float:
     return float(raw / 2 + raw / 2 / 256 * 4)
 
 
+def page_cost_steps(cfg: KVStoreConfig) -> int:
+    """Page-plane service time in decode steps, from the partitioned
+    budget (§4.1): a page of `page_tokens` drains `page_budget_per_step`
+    token-slots of link time per step."""
+    return max(1, round(cfg.page_tokens / cfg.page_budget_per_step))
+
+
 def step_fetch(state: KVStoreState, cfg: KVStoreConfig,
                remote_k, remote_v, needed_pages):
     """Serve one decode step needing `needed_pages` (R,) page ids.
 
     Returns (state, k (R,page,KV,D), v, served_local (R,) bool).
     Misses are served via the sub-block plane from the remote tier now;
-    page migrations are scheduled per the §4.2 selection rule and land
-    after `page_budget` steps' worth of link time.
+    page migrations go through the shared §4.2 selection unit and land
+    after their partitioned-budget service steps. A miss whose page is
+    already inflight and issued moves no extra wire bytes — the request
+    rides the page already in flight (exactly the simulator's race rule).
     """
     r = needed_pages.shape[0]
     clock = state.clock + 1.0
+    cost = float(page_cost_steps(cfg))
 
-    # --- local lookup (vectorized CAM) ---
-    eq = state.slot_page[None, :] == needed_pages[:, None]   # (R, N)
-    local_hit = jnp.any(eq, axis=1)
-    slot = jnp.argmax(eq, axis=1)
+    # --- land arrived pages into LRU victim slots (engine says which) ---
+    landed, landed_pages = poll_arrivals(state.eng, clock)
 
-    # --- inflight bookkeeping: pages land when their budget drains ---
-    left = jnp.maximum(state.inflight_left - cfg.page_budget_per_step, 0)
-    landed = (state.inflight_page >= 0) & (left == 0) \
-        & (state.inflight_left > 0)
-    # land pages into LRU victim slots (sequentially via scan over P)
     def land_one(carry, i):
         sp, sa, kp, vp = carry
-        pid = state.inflight_page[i]
+        pid = landed_pages[i]
         do = landed[i]
         victim = jnp.argmin(sa)
-        page_k = ops.paged_gather(remote_k, pid[None])[0].astype(kp.dtype)
-        page_v = ops.paged_gather(remote_v, pid[None])[0].astype(vp.dtype)
+        page_k = ops.paged_gather(remote_k,
+                                  jnp.maximum(pid, 0)[None])[0].astype(
+                                      kp.dtype)
+        page_v = ops.paged_gather(remote_v,
+                                  jnp.maximum(pid, 0)[None])[0].astype(
+                                      vp.dtype)
         sp = sp.at[victim].set(jnp.where(do, pid, sp[victim]))
         sa = sa.at[victim].set(jnp.where(do, clock, sa[victim]))
         kp = kp.at[victim].set(jnp.where(do, page_k, kp[victim]))
@@ -117,8 +136,14 @@ def step_fetch(state: KVStoreState, cfg: KVStoreConfig,
 
     (slot_page, slot_age, kpool, vpool), _ = jax.lax.scan(
         land_one, (state.slot_page, state.slot_age, state.kpool,
-                   state.vpool), jnp.arange(state.inflight_page.shape[0]))
-    inflight_page = jnp.where(landed, -1, state.inflight_page)
+                   state.vpool), jnp.arange(state.eng.page_key.shape[0]))
+    eng = retire_arrivals(state.eng, clock)
+
+    # --- local lookup (vectorized CAM) — after landing, so a page that
+    # arrives this step hits immediately (desim: tbl_valid <= t_issue) ---
+    eq = slot_page[None, :] == needed_pages[:, None]         # (R, N)
+    local_hit = jnp.any(eq, axis=1)
+    slot = jnp.argmax(eq, axis=1)
 
     # --- serve: hits from the pool, misses via sub-block critical fetch ---
     k_local = ops.paged_gather(kpool, jnp.maximum(slot, 0))
@@ -130,37 +155,33 @@ def step_fetch(state: KVStoreState, cfg: KVStoreConfig,
     v = jnp.where(sel, v_local, v_remote)
     slot_age = slot_age.at[slot].max(jnp.where(local_hit, clock, 0.0))
 
-    # --- §4.2 selection: schedule page moves for misses if buffer has room
-    page_util = jnp.mean((inflight_page >= 0).astype(F32))
-    sub_util = jnp.mean((~local_hit).astype(F32))  # proxy: this step's load
-    want_page = (~local_hit) & (page_util < 1.0)
-    already = jnp.any(inflight_page[None, :] == needed_pages[:, None],
-                      axis=1)
-    want_page &= ~already
-    # page-plane service time in steps, from the partitioned budget
-    page_cost_steps = jnp.int32(
-        max(1, round(cfg.page_tokens / cfg.page_budget_per_step)))
+    # --- §4.2: route every miss through the shared selection unit and
+    # schedule through the shared inflight buffers (sequential within the
+    # step, so same-page requests dedup exactly like the simulator) ---
+    def sched_one(eng, i):
+        pid = needed_pages[i]
+        send_line, send_page = select_granularity(
+            eng, pid, clock, selection_enabled=cfg.selection,
+            always_both=not cfg.selection)
+        miss = ~local_hit[i]
+        do_page = miss & send_page
+        do_line = miss & send_line
+        eng = _gate_tree(do_page, eng,
+                         schedule_page(eng, pid, clock, clock + cost))
+        eng = _gate_tree(do_line, eng,
+                         schedule_line(eng, pid, i % 64, clock))
+        return eng, (do_line, do_page)
 
-    def sched_one(carry, i):
-        ip, il = carry
-        free = ip < 0
-        has = jnp.any(free)
-        idx = jnp.argmax(free)
-        do = want_page[i] & has
-        ip = ip.at[idx].set(jnp.where(do, needed_pages[i], ip[idx]))
-        il = il.at[idx].set(jnp.where(do, page_cost_steps, il[idx]))
-        return (ip, il), do
+    eng, (line_sent, scheduled) = jax.lax.scan(sched_one, eng,
+                                               jnp.arange(r))
 
-    (inflight_page, inflight_left), scheduled = jax.lax.scan(
-        sched_one, (inflight_page, left), jnp.arange(r))
-
-    n_miss = jnp.sum(~local_hit)
+    n_sub = jnp.sum(line_sent)
     n_sched = jnp.sum(scheduled)
-    sub_bytes = n_miss * _wire_bytes(cfg, 1, False)       # critical tokens
+    sub_bytes = n_sub * _wire_bytes(cfg, 1, False)        # critical tokens
     page_bytes = n_sched * _wire_bytes(cfg, cfg.page_tokens,
                                        cfg.compress_pages)
     stats = {
-        "sub_block_fetches": state.stats["sub_block_fetches"] + n_miss,
+        "sub_block_fetches": state.stats["sub_block_fetches"] + n_sub,
         "page_moves": state.stats["page_moves"] + n_sched,
         "wire_bytes": state.stats["wire_bytes"] + sub_bytes + page_bytes,
         "uncompressed_bytes": state.stats["uncompressed_bytes"] + sub_bytes
@@ -169,7 +190,6 @@ def step_fetch(state: KVStoreState, cfg: KVStoreConfig,
         "requests": state.stats["requests"] + r,
     }
     new_state = KVStoreState(kpool=kpool, vpool=vpool, slot_page=slot_page,
-                             slot_age=slot_age, inflight_page=inflight_page,
-                             inflight_left=inflight_left, clock=clock,
+                             slot_age=slot_age, eng=eng, clock=clock,
                              stats=stats)
     return new_state, k, v, local_hit

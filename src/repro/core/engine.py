@@ -75,6 +75,12 @@ def first_free(keys) -> Tuple[jnp.ndarray, jnp.ndarray]:
     return jnp.any(free), jnp.argmax(free)
 
 
+def gate_tree(gate, old, new):
+    """where(gate, new, old) over a state pytree — the canonical way to
+    apply an engine transition conditionally inside traced code."""
+    return jax.tree.map(lambda a, b: jnp.where(gate, b, a), old, new)
+
+
 # ------------------------------------------------------------- selection
 def select_granularity(st: EngineState, page_id, now=None, *,
                        selection_enabled: bool, always_both: bool
@@ -88,6 +94,9 @@ def select_granularity(st: EngineState, page_id, now=None, *,
       issued yet at time `now` (still queued, so the line can win the race).
     * always_both (BP scheme) bypasses the selection logic (but still
       dedups inflight pages / full buffers).
+
+    Both mode switches are traceable (`where`-selected, not Python
+    branches), so one compiled program can serve every scheme.
     """
     page_found, pidx = find(st.page_key, page_id)
     page_room, _ = first_free(st.page_key)
@@ -95,19 +104,17 @@ def select_granularity(st: EngineState, page_id, now=None, *,
     page_util = utilization(st.page_key)
     sb_util = utilization(st.sb_key)
     send_page = jnp.logical_and(~page_found, page_room)
-    if always_both:
-        send_line = sb_room
-    elif selection_enabled:
-        now = jnp.asarray(0.0 if now is None else now, F32)
-        page_issued = jnp.where(page_found,
-                                st.page_issue[pidx] <= now,
-                                False)
-        line_if_inflight = jnp.logical_and(sb_util < page_util,
-                                           ~page_issued)
-        send_line = jnp.where(page_found, line_if_inflight, True)
-        send_line = jnp.logical_and(send_line, sb_room)
-    else:
-        send_line = jnp.logical_and(~page_found, sb_room)
+    now = jnp.asarray(0.0 if now is None else now, F32)
+    page_issued = jnp.where(page_found,
+                            st.page_issue[pidx] <= now,
+                            False)
+    line_if_inflight = jnp.logical_and(sb_util < page_util,
+                                       ~page_issued)
+    selected = jnp.where(page_found, line_if_inflight, True)
+    send_line = jnp.where(jnp.asarray(always_both, bool), True,
+                          jnp.where(jnp.asarray(selection_enabled, bool),
+                                    selected, ~page_found))
+    send_line = jnp.logical_and(send_line, sb_room)
     return send_line, send_page
 
 
@@ -142,6 +149,17 @@ def schedule_line(st: EngineState, page_id, offset, arrival_t
 
 
 # --------------------------------------------------------------- arrivals
+def poll_arrivals(st: EngineState, now) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(mask, keys) of inflight pages whose data has arrived by `now`.
+
+    Callers that need the payload (e.g. the serving KV store landing pages
+    into its local pool) read this before `retire_arrivals` clears them.
+    Throttled pages (§4.3) are excluded — they are re-requested instead.
+    """
+    done = (st.page_arrival <= now) & (st.page_state == SCHEDULED)
+    return done, jnp.where(done, st.page_key, -1)
+
+
 def retire_arrivals(st: EngineState, now) -> EngineState:
     """Release every entry whose data has arrived by `now`.
 
@@ -149,12 +167,12 @@ def retire_arrivals(st: EngineState, now) -> EngineState:
     (§4.1: later line packets for that page are ignored) — unless the page
     was throttled (§4.3), in which case it is re-requested by the caller.
     """
-    page_done = (st.page_arrival <= now) & (st.page_state == SCHEDULED)
-    arrived_pages = jnp.where(page_done, st.page_key, -1)
-    # drop sub-block entries whose page just arrived
+    page_done, arrived_pages = poll_arrivals(st, now)
+    # drop sub-block entries whose page just arrived: portable broadcast
+    # membership test (empty slots have sb_page == -1 and only ever match
+    # the -1 placeholders in arrived_pages — a no-op rewrite)
     sb_page = st.sb_key // 64
-    sb_drop = jnp.isin(sb_page, arrived_pages, assume_unique=False) \
-        if hasattr(jnp, "isin") else jnp.zeros_like(st.sb_key, bool)
+    sb_drop = (sb_page[:, None] == arrived_pages[None, :]).any(axis=1)
     sb_done = (st.sb_arrival <= now) | sb_drop
     return st._replace(
         page_key=jnp.where(page_done, -1, st.page_key),

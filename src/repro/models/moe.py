@@ -128,8 +128,10 @@ def _ep_local(axis_name, e_total, k, cf, xl, idxl, wl, wg, wu, wd):
     xl (Tl, D) local tokens; idxl (Tl, k) global expert ids; wl (Tl, k).
     wg/wu/wd: (E_local, D, F) / (E_local, F, D) local expert weights.
     """
-    m = jax.lax.axis_size(axis_name)
-    e_local = e_total // m
+    # shard count from the static weight shapes (jax.lax.axis_size is a
+    # newer-jax spelling, and m must be a python int for reshapes anyway)
+    e_local = wg.shape[0]
+    m = e_total // e_local
     tl, d = xl.shape
     nslots = tl * k
     slot_expert = idxl.reshape(-1)

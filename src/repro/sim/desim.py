@@ -5,9 +5,16 @@ equivalent on a CPU-only box is a request-level DES replaying LLC-miss
 traces through: local memory (set-assoc, LRU/FIFO), the DaeMon engines
 (inflight buffers + selection unit from ``repro.core.engine``), partitioned
 virtual channels over the network and the remote-memory bus
-(``repro.core.bandwidth`` semantics), link compression, and an MLP-window
-core model. One `lax.scan` step per request; one jit per scheme (flags are
-static python — each scheme is its own compiled program).
+(``repro.core.bandwidth.serve_dual`` — the only place channel arithmetic
+lives), link compression, and an MLP-window core model.
+
+Scheme flags are *traced data* (``repro.sim.schemes.TraceableFlags``), not
+static Python: every scheme switch in the per-request transition is a
+``where``, so ``simulate_lattice`` runs the whole scheme x network x
+bw-ratio lattice as ONE compiled program ``vmap``ped over both axes — one
+jit trace per (trace shape, footprint, SimConfig) instead of one per
+scheme. ``simulate_grid`` is the single-scheme wrapper kept for paired
+baseline/variant comparisons.
 
 Fidelity notes (vs the paper's cycle-accurate setup) are in DESIGN.md.
 """
@@ -21,11 +28,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import (EngineState, init_engine_state, find,
-                               retire_arrivals, schedule_line, schedule_page,
+from repro.core import bandwidth
+from repro.core.engine import (EngineState, gate_tree as _gate_tree,
+                               init_engine_state, find, retire_arrivals,
+                               schedule_line, schedule_page,
                                select_granularity)
 from repro.core.params import DaemonParams, NetworkParams
-from repro.sim.schemes import SchemeFlags
+from repro.sim.schemes import SchemeFlags, as_traceable, stack_flags
 from repro.sim.trace import Trace
 
 F32 = jnp.float32
@@ -82,33 +91,23 @@ def _init_state(cfg: SimConfig, n_pages: int) -> SimState:
     )
 
 
-def _occupy(busy, t_ready, nbytes, bw, gate):
-    """Serialize nbytes on a busy-until channel iff gate."""
-    start = jnp.maximum(t_ready, busy)
-    dur = nbytes / jnp.maximum(bw, 1e-6)
-    done = start + dur
-    return jnp.where(gate, done, busy), done
-
-
-def _gate_tree(gate, old, new):
-    return jax.tree.map(lambda a, b: jnp.where(gate, b, a), old, new)
-
-
-def make_step(flags: SchemeFlags, cfg: SimConfig):
-    """Per-request transition for one scheme (flags static)."""
+def make_step(flags, cfg: SimConfig):
+    """Per-request transition. `flags` may be a SchemeFlags (converted) or
+    a TraceableFlags pytree — possibly traced, so every scheme switch
+    below is `where`-gated and one compiled step serves any scheme."""
+    fl = as_traceable(flags)
     dp = cfg.daemon
     comp_lat = dp.compress_latency_ns
     line_b = float(dp.line_bytes)
     page_b = float(dp.page_bytes)
     m = cfg.num_mc
-    ratio = flags.bw_ratio
-    line_share = ratio if flags.partition else 1.0
-    page_share = (1.0 - ratio) if flags.partition else 1.0
-    want_page = (flags.move_pages or flags.page_free) and flags.use_local_mem
 
     def step(st: SimState, inp):
         page, off, gap, wr, net, comp_ratio = inp
         sets = st.tbl_page.shape[0]
+        ratio = fl.bw_ratio
+        want_page = (fl.move_pages | fl.page_free) & fl.use_local_mem
+        line_share, page_share = bandwidth.shares(fl.partition, ratio)
 
         # ---- core issue (MLP window) ----
         oldest = jnp.min(st.ring)
@@ -122,26 +121,23 @@ def make_step(flags: SchemeFlags, cfg: SimConfig):
         present = jnp.any(hit_vec)
         way = jnp.argmax(hit_vec)
         valid_t = st.tbl_valid[set_idx, way]
-        is_hit = present & (valid_t <= t_issue) & flags.use_local_mem
-        if flags.local_only:
-            is_hit = jnp.bool_(True)
+        is_hit = (present & (valid_t <= t_issue) & fl.use_local_mem) \
+            | fl.local_only
         inflight_tbl = present & (valid_t > t_issue)
 
         eng = retire_arrivals(st.eng, t_issue)
 
         # ---- engine decision (§4.2) ----
         send_line, send_page = select_granularity(
-            eng, page, t_issue, selection_enabled=flags.selection,
-            always_both=not flags.selection)
+            eng, page, t_issue, selection_enabled=fl.selection,
+            always_both=~fl.selection)
         page_found, pidx = find(eng.page_key, page)
         pending_arrival = jnp.where(page_found, eng.page_arrival[pidx], BIG)
-        send_page = send_page & want_page & ~is_hit & ~inflight_tbl
-        send_line = send_line & flags.move_lines & ~is_hit
-        if not flags.move_pages and not flags.page_free:
-            send_line = ~is_hit        # line-only scheme: always fetch
-        if flags.local_only:
-            send_line = jnp.bool_(False)
-            send_page = jnp.bool_(False)
+        send_page = (send_page & want_page & ~is_hit & ~inflight_tbl
+                     & ~fl.local_only)
+        send_line = send_line & fl.move_lines & ~is_hit
+        line_only = ~fl.move_pages & ~fl.page_free   # line-only: always fetch
+        send_line = jnp.where(line_only, ~is_hit, send_line) & ~fl.local_only
 
         mc = page % m
         bw = net["bw"][mc] * net["bw_mult"]
@@ -149,45 +145,34 @@ def make_step(flags: SchemeFlags, cfg: SimConfig):
         membw = net["membw"]
         t0 = t_issue + sw + net["trans_lat"] + net["remote_lat"]
 
-        # ---- channels: partitioned virtual channels or one shared FIFO
-        if flags.partition:
-            line_mem_busy, page_mem_busy = st.mem_line[mc], st.mem_page[mc]
-            line_net_busy, page_net_busy = st.ch_line[mc], st.ch_page[mc]
-        else:
-            line_mem_busy = page_mem_busy = st.mem_page[mc]
-            line_net_busy = page_net_busy = st.ch_page[mc]
+        wire_b = jnp.where(fl.compress, page_b / comp_ratio, page_b)
+        comp_delay = jnp.where(fl.compress, comp_lat, 0.0)
+        move_page_physically = send_page & ~fl.page_free
 
-        # ---- line path: mem bus read then net transfer ----
-        lm_busy, lm_done = _occupy(line_mem_busy, t0, line_b,
-                                   membw * line_share, send_line)
-        if not flags.partition:
-            page_mem_busy = lm_busy    # shared FIFO: page sees line's use
-        ln_busy, ln_done = _occupy(line_net_busy, lm_done, line_b,
-                                   bw * line_share, send_line)
-        if not flags.partition:
-            page_net_busy = ln_busy
+        # ---- remote-memory bus then network link: each a dual-granularity
+        # channel pair (partitioned virtual channels or one shared FIFO) ----
+        lm_busy, pm_busy, lm_done, pm_done = bandwidth.serve_dual(
+            st.mem_line[mc], st.mem_page[mc], partition=fl.partition,
+            ratio=ratio, bw=membw,
+            line_ready=t0, line_bytes=line_b, line_gate=send_line,
+            page_ready=t0, page_bytes=page_b, page_gate=move_page_physically)
+        ln_busy, pn_busy, ln_done, pn_done = bandwidth.serve_dual(
+            st.ch_line[mc], st.ch_page[mc], partition=fl.partition,
+            ratio=ratio, bw=bw,
+            line_ready=lm_done, line_bytes=line_b, line_gate=send_line,
+            page_ready=pm_done + comp_delay, page_bytes=wire_b,
+            page_gate=move_page_physically)
         line_arrival = jnp.where(send_line, ln_done + sw, BIG)
-
-        # ---- page path ----
-        wire_b = page_b / comp_ratio if flags.compress else page_b
-        move_page_physically = send_page & ~jnp.bool_(flags.page_free)
-        pm_busy, pm_done = _occupy(page_mem_busy, t0, page_b,
-                                   membw * page_share,
-                                   move_page_physically)
-        pn_ready = pm_done + (comp_lat if flags.compress else 0.0)
-        pn_busy, pn_done = _occupy(page_net_busy, pn_ready, wire_b,
-                                   bw * page_share, move_page_physically)
         # "issued" (left the page queue) = network transmission start —
         # until then a later line request can still win the race (§4.2)
         pn_start = pn_done - wire_b / jnp.maximum(bw * page_share, 1e-6)
-        decomp = comp_lat if flags.compress else 0.0
         page_arrival = jnp.where(move_page_physically,
-                                 pn_done + sw + decomp, BIG)
-        if flags.page_free:
-            # page materializes at the cost of one line-granularity access
-            free_t = (t_issue + 2 * sw + net["trans_lat"]
-                      + net["remote_lat"] + line_b / bw + line_b / membw)
-            page_arrival = jnp.where(send_page, free_t, BIG)
+                                 pn_done + sw + comp_delay, BIG)
+        # page-free: materializes at the cost of one line-granularity access
+        free_t = (t_issue + 2 * sw + net["trans_lat"]
+                  + net["remote_lat"] + line_b / bw + line_b / membw)
+        page_arrival = jnp.where(fl.page_free & send_page, free_t,
+                                 page_arrival)
 
         # ---- serve time ----
         cand = jnp.minimum(jnp.minimum(line_arrival, page_arrival),
@@ -199,22 +184,20 @@ def make_step(flags: SchemeFlags, cfg: SimConfig):
         done = jnp.where(is_hit, t_issue + net["local_lat"], cand)
 
         # ---- engine bookkeeping (gated insertions) ----
-        if want_page:
-            eng = _gate_tree(send_page, eng,
-                             schedule_page(eng, page, pn_start,
-                                           page_arrival))
-        if flags.move_lines:
-            eng = _gate_tree(send_line, eng,
-                             schedule_line(eng, page, off, line_arrival))
+        eng = _gate_tree(send_page, eng,
+                         schedule_page(eng, page, pn_start, page_arrival))
+        eng = _gate_tree(send_line & fl.move_lines, eng,
+                         schedule_line(eng, page, off, line_arrival))
 
         # ---- local table update (insert page at LRU/FIFO victim) ----
-        do_insert = send_page & flags.use_local_mem
+        do_insert = send_page & fl.use_local_mem
         victim = jnp.argmin(st.tbl_age[set_idx])
         evict_page = st.tbl_page[set_idx, victim]
         evict_dirty = st.tbl_dirty[set_idx, victim] & (evict_page >= 0)
         wb = do_insert & evict_dirty
         wb_bytes = jnp.where(wb, wire_b, 0.0)
-        rev_busy, _ = _occupy(st.ch_rev[mc], t_issue, wire_b, bw, wb)
+        rev_busy, _ = bandwidth.occupy_busy(st.ch_rev[mc], t_issue, wire_b,
+                                            bw, gate=wb)
 
         def upd(tbl, val, gate, w):
             return tbl.at[set_idx, w].set(
@@ -256,7 +239,7 @@ def make_step(flags: SchemeFlags, cfg: SimConfig):
             "served_page": stt["served_page"] + ((~is_hit) & ~served_line),
             "page_drops": stt["page_drops"] + (
                 (~is_hit) & ~send_page & ~page_found & ~inflight_tbl
-                & jnp.bool_(want_page)),
+                & want_page),
             "dirty_evicts": stt["dirty_evicts"] + wb,
         }
 
@@ -265,11 +248,9 @@ def make_step(flags: SchemeFlags, cfg: SimConfig):
             ring=st.ring.at[slot].set(done),
             tbl_page=tbl_page, tbl_age=tbl_age, tbl_valid=tbl_valid,
             tbl_dirty=tbl_dirty, eng=eng,
-            ch_line=(st.ch_line.at[mc].set(ln_busy) if flags.partition
-                     else st.ch_line),
+            ch_line=st.ch_line.at[mc].set(ln_busy),
             ch_page=st.ch_page.at[mc].set(pn_busy),
-            mem_line=(st.mem_line.at[mc].set(lm_busy) if flags.partition
-                      else st.mem_line),
+            mem_line=st.mem_line.at[mc].set(lm_busy),
             mem_page=st.mem_page.at[mc].set(pm_busy),
             ch_rev=st.ch_rev.at[mc].set(rev_busy),
             stats=stats,
@@ -279,9 +260,9 @@ def make_step(flags: SchemeFlags, cfg: SimConfig):
     return step
 
 
-def simulate_one(flags: SchemeFlags, cfg: SimConfig, n_pages: int,
-                 warm_frac: float, trace_arrays, net, comp_ratio):
-    """Run one scheme over one (trace, net) point. Returns metrics dict."""
+def _simulate_point(cfg, n_pages, flags, warm_after, trace_arrays, net,
+                    comp_ratio):
+    """One (scheme, net) lattice point on pure arrays — the vmap kernel."""
     st = _init_state(cfg, n_pages)
     step = make_step(flags, cfg)
     page, off, gap, wr, bw_mult = trace_arrays
@@ -295,7 +276,7 @@ def simulate_one(flags: SchemeFlags, cfg: SimConfig, n_pages: int,
            "remote_lat": jnp.broadcast_to(net["remote_lat"], (r,)),
            "trans_lat": jnp.broadcast_to(net["trans_lat"], (r,)),
            "warm_after": jnp.broadcast_to(
-               jnp.asarray(warm_frac * r, F32), (r,)),
+               jnp.asarray(warm_after, F32), (r,)),
            "bw_mult": bw_mult},
           jnp.broadcast_to(jnp.asarray(comp_ratio, F32), (r,)))
     final, _ = jax.lax.scan(step, st, xs)
@@ -316,13 +297,35 @@ def simulate_one(flags: SchemeFlags, cfg: SimConfig, n_pages: int,
     }
 
 
-def simulate_grid(scheme_flags: SchemeFlags, cfg: SimConfig, trace: Trace,
-                  nets, comp_ratio: float, bw_mult=None,
-                  warm_frac: float = 0.3):
-    """One scheme x one trace over a list of network configs.
+@partial(jax.jit, static_argnums=(0, 1))
+def _lattice_jit(cfg, n_pages, tflags, warm_after, trace_arrays, nets,
+                 comp_ratio):
+    """vmap(schemes) o vmap(nets) over `_simulate_point`, jitted once per
+    (SimConfig, footprint, trace shape)."""
+    point = partial(_simulate_point, cfg, n_pages)
+    over_nets = jax.vmap(point, in_axes=(None, None, None, 0, None))
+    over_schemes = jax.vmap(over_nets, in_axes=(0, None, None, None, 0))
+    return over_schemes(tflags, warm_after, trace_arrays, nets, comp_ratio)
 
-    The network axis is vmapped: one compile, all configs vectorized.
+
+def lattice_cache_size() -> int:
+    """Compiled lattice variants so far (keyed by SimConfig + shapes)."""
+    return _lattice_jit._cache_size()
+
+
+def simulate_lattice(schemes, cfg: SimConfig, trace: Trace, nets,
+                     comp_ratio, bw_mult=None, warm_frac: float = 0.3):
+    """Every scheme x every net over one trace in ONE compiled program.
+
+    schemes: sequence of SchemeFlags / TraceableFlags — bw-ratio variants
+    are just more entries on the scheme axis. comp_ratio: scalar or one
+    value per scheme. Returns [scheme][net] -> metrics dict of floats.
+    The jit trace is cached per (SimConfig, footprint, trace shape), so
+    repeated sweeps — more ratios, more networks — cost compile time once.
     """
+    schemes = list(schemes)
+    if not schemes:
+        raise ValueError("simulate_lattice needs at least one scheme")
     r = len(trace.page)
     if bw_mult is None:
         bw_mult = np.ones(r, np.float32)
@@ -331,12 +334,22 @@ def simulate_grid(scheme_flags: SchemeFlags, cfg: SimConfig, trace: Trace,
               jnp.asarray(bw_mult, F32))
     stacked = {k: jnp.stack([jnp.asarray(n[k], F32) for n in nets])
                for k in nets[0]}
-    fn = jax.jit(jax.vmap(
-        partial(simulate_one, scheme_flags, cfg, trace.n_pages, warm_frac),
-        in_axes=(None, 0, None)))
-    res = fn(arrays, stacked, jnp.asarray(comp_ratio, F32))
-    return [{k: float(v[i]) for k, v in res.items()}
-            for i in range(len(nets))]
+    cr = jnp.broadcast_to(jnp.asarray(comp_ratio, F32), (len(schemes),))
+    # warm_after computed in python float64 (f32(warm_frac) * r can round
+    # up past the integer boundary and drop the boundary request)
+    res = _lattice_jit(cfg, trace.n_pages, stack_flags(schemes),
+                       jnp.asarray(warm_frac * r, F32), arrays, stacked, cr)
+    return [[{k: float(v[i, j]) for k, v in res.items()}
+             for j in range(len(nets))] for i in range(len(schemes))]
+
+
+def simulate_grid(scheme_flags, cfg: SimConfig, trace: Trace,
+                  nets, comp_ratio, bw_mult=None,
+                  warm_frac: float = 0.3):
+    """One scheme x one trace over a list of network configs (a lattice of
+    scheme-size 1 — kept for paired baseline/variant comparisons)."""
+    return simulate_lattice([scheme_flags], cfg, trace, nets, comp_ratio,
+                            bw_mult, warm_frac)[0]
 
 
 def make_net(p: NetworkParams, num_mc: int = 1, bw_factors=None,

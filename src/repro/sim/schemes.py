@@ -11,10 +11,20 @@
                ALWAYS both (no selection) (§4.1)
   PQ         — BP + selection granularity unit (§4.2), no compression
   DaeMon     — PQ + LC (the full design)
+
+`SchemeFlags` is the human-facing registry entry (static Python bools).
+`TraceableFlags` is its movement-plane pytree twin: jnp bool/f32 leaves
+that ride *inside* a jitted program as data, so the scheme axis can be
+`vmap`ped — one compile serves the whole scheme x network x ratio lattice
+(`repro.sim.desim.simulate_lattice`) instead of one compile per scheme.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
 
 
 @dataclass(frozen=True)
@@ -29,6 +39,36 @@ class SchemeFlags:
     compress: bool = False       # §4.4 link compression on pages
     use_local_mem: bool = True   # cache-line scheme: False
     bw_ratio: float = 0.25
+
+
+class TraceableFlags(NamedTuple):
+    """SchemeFlags as traced array leaves (`name` dropped — it is the one
+    non-traceable field). Stack these to vmap over the scheme axis."""
+    local_only: jnp.ndarray
+    move_lines: jnp.ndarray
+    move_pages: jnp.ndarray
+    page_free: jnp.ndarray
+    partition: jnp.ndarray
+    selection: jnp.ndarray
+    compress: jnp.ndarray
+    use_local_mem: jnp.ndarray
+    bw_ratio: jnp.ndarray
+
+
+def as_traceable(flags) -> TraceableFlags:
+    """SchemeFlags -> TraceableFlags (idempotent on TraceableFlags)."""
+    if isinstance(flags, TraceableFlags):
+        return flags
+    return TraceableFlags(
+        *(jnp.asarray(getattr(flags, f), bool)
+          for f in TraceableFlags._fields[:-1]),
+        bw_ratio=jnp.asarray(flags.bw_ratio, jnp.float32))
+
+
+def stack_flags(flags_list: Sequence) -> TraceableFlags:
+    """Stack schemes along a leading axis (the lattice's scheme axis)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs),
+                        *[as_traceable(f) for f in flags_list])
 
 
 SCHEMES = {

@@ -8,6 +8,7 @@ paper's Sniper runs. A trace is a struct of arrays:
 """
 from __future__ import annotations
 
+import zlib
 from typing import NamedTuple
 
 import numpy as np
@@ -25,7 +26,10 @@ class Trace(NamedTuple):
 
 def generate_trace(w: WorkloadParams, n_requests: int, seed: int = 0
                    ) -> Trace:
-    rng = np.random.default_rng(seed * 9176 + hash(w.name) % 65536)
+    # crc32, NOT hash(): str hashes are salted per process, which silently
+    # broke cross-process determinism (and the benchmark trace cache)
+    rng = np.random.default_rng(seed * 9176
+                                + zlib.crc32(w.name.encode()) % 65536)
     k = w.streams
     # active stream state: current page, lines remaining, next offset
     pages = np.zeros(k, np.int64)

@@ -10,7 +10,8 @@ in a fully disaggregated system:
   * compressibility   — LZ wire ratio (paper fig 12: avg 4.47x, dr/rs 1.42x).
 
 Values are calibrated against the paper's own aggregates (§6, fig 3/8/9/10)
-— see tests/test_sim_paper.py and EXPERIMENTS.md §Benchmarks.
+— see tests/test_sim.py, tests/test_movement_plane.py and
+EXPERIMENTS.md §Benchmarks.
 """
 from __future__ import annotations
 

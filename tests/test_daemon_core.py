@@ -3,7 +3,7 @@ partitioning semantics + dirty unit (§4.1-§4.3)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.core.bandwidth import init_link, send_line, send_page
 from repro.core.engine import (NEVER, init_engine_state, find, first_free,

@@ -1,0 +1,159 @@
+"""The unified movement plane: traceable-flags lattice equivalence against
+the seed per-scheme implementation (golden capture), single-compile
+behavior of `simulate_lattice`, and desim/daemon_store agreement on
+inflight-buffer occupancy through the shared engine primitives."""
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.daemon_store import (KVStoreConfig, init_kv_store,
+                                     page_cost_steps, step_fetch)
+from repro.core.engine import (init_engine_state, retire_arrivals,
+                               schedule_line, schedule_page,
+                               select_granularity)
+from repro.core.params import NetworkParams
+from repro.sim.desim import (SimConfig, lattice_cache_size, make_net,
+                             simulate_grid, simulate_lattice)
+from repro.sim.schemes import SCHEMES, as_traceable, stack_flags, with_ratio
+from repro.sim.trace import generate_trace
+from repro.sim.workloads import WORKLOADS
+
+GOLDEN = Path(__file__).parent / "golden" / "seed_movement_golden.json"
+
+
+# ------------------------------------------------- lattice == seed schemes
+@pytest.fixture(scope="module")
+def golden():
+    return json.loads(GOLDEN.read_text())
+
+
+def _nets(pairs):
+    return [make_net(NetworkParams(bw_factor=bf, switch_latency_ns=sw))
+            for sw, bf in pairs]
+
+
+@pytest.mark.parametrize("wl", ("pr", "dr"))
+def test_lattice_matches_seed_per_scheme_golden(golden, wl):
+    """The traceable-flags single-compile path reproduces the seed's
+    per-scheme jit programs (golden captured from the seed code) for all
+    9 schemes x 3 networks within rtol 1e-5."""
+    rec = golden["workloads"][wl]
+    names = golden["schemes"]
+    tr = generate_trace(WORKLOADS[wl], golden["r"], seed=rec["seed"])
+    nets = _nets(golden["net_pairs"])
+    res = simulate_lattice([SCHEMES[s] for s in names], SimConfig(), tr,
+                           nets, rec["comp_ratio"])
+    for i, s in enumerate(names):
+        for j in range(len(nets)):
+            for key, new in res[i][j].items():
+                old = rec["schemes"][s][j][key]
+                np.testing.assert_allclose(
+                    new, old, rtol=1e-5, atol=1e-6,
+                    err_msg=f"{wl}/{s}/net{j}/{key}")
+
+
+def test_simulate_grid_is_a_lattice_slice():
+    w = WORKLOADS["kc"]
+    tr = generate_trace(w, 1200, seed=3)
+    nets = _nets([(100.0, 4.0), (400.0, 8.0)])
+    names = ("remote", "daemon")
+    lat = simulate_lattice([SCHEMES[s] for s in names], SimConfig(), tr,
+                           nets, w.comp_ratio)
+    for i, s in enumerate(names):
+        grid = simulate_grid(SCHEMES[s], SimConfig(), tr, nets,
+                             w.comp_ratio)
+        for j in range(len(nets)):
+            for key in grid[j]:
+                np.testing.assert_allclose(lat[i][j][key], grid[j][key],
+                                           rtol=1e-6, atol=1e-9)
+
+
+# --------------------------------------------------------- compile counts
+def test_single_compile_for_full_scheme_lattice():
+    """9 schemes x 3 networks adds exactly ONE jit trace; re-running with
+    different bw ratios / comp ratios (same shapes) adds none."""
+    w = WORKLOADS["bc"]
+    tr = generate_trace(w, 800, seed=5)
+    nets = _nets([(100.0, 2.0), (100.0, 4.0), (400.0, 8.0)])
+    all_schemes = [SCHEMES[s] for s in SCHEMES]
+    assert len(all_schemes) == 9
+    before = lattice_cache_size()
+    simulate_lattice(all_schemes, SimConfig(), tr, nets, w.comp_ratio)
+    assert lattice_cache_size() - before == 1
+    ratio_variants = [with_ratio(f, 0.5) for f in all_schemes]
+    simulate_lattice(ratio_variants, SimConfig(), tr, nets, 2.0)
+    assert lattice_cache_size() - before == 1  # flags are data, not code
+
+
+def test_traceable_flags_pytree():
+    tf = as_traceable(SCHEMES["daemon"])
+    leaves = jax.tree.leaves(tf)
+    assert all(hasattr(l, "dtype") for l in leaves)
+    stacked = stack_flags([SCHEMES["remote"], SCHEMES["daemon"]])
+    assert stacked.partition.shape == (2,)
+    assert bool(stacked.partition[1]) and not bool(stacked.partition[0])
+    assert as_traceable(tf) is tf
+
+
+# ------------------------------------- store and desim share one engine
+@pytest.mark.parametrize("seed", (0, 1, 2))
+def test_store_and_engine_agree_on_inflight_occupancy(seed):
+    """daemon_store's movement plane IS core.engine: replaying the store's
+    miss decisions through the bare engine primitives (the same calls the
+    simulator's make_step issues) reproduces the store's inflight page and
+    sub-block buffers exactly, every step."""
+    cfg = KVStoreConfig(num_local_pages=4, page_tokens=8, kv_heads=2,
+                        head_dim=16, page_budget_per_step=2)
+    rng = np.random.default_rng(seed)
+    steps, width, n_remote = 25, 3, 24
+    pages = rng.integers(0, n_remote, size=(steps, width)).astype(np.int32)
+    remote_k = jnp.zeros((n_remote, 8, 2, 16), jnp.float32)
+    remote_v = jnp.zeros_like(remote_k)
+
+    state = init_kv_store(cfg)
+    eng_ref = init_engine_state(cfg.daemon)
+    cost = float(page_cost_steps(cfg))
+    gate = lambda g, old, new: jax.tree.map(
+        lambda a, b: jnp.where(g, b, a), old, new)
+    for t in range(steps):
+        need = jnp.asarray(pages[t])
+        state, _, _, hit = step_fetch(state, cfg, remote_k, remote_v, need)
+        clock = jnp.float32(t + 1)
+        eng_ref = retire_arrivals(eng_ref, clock)
+        for i in range(width):
+            pid = jnp.int32(pages[t, i])
+            send_line, send_page = select_granularity(
+                eng_ref, pid, clock, selection_enabled=True,
+                always_both=False)
+            miss = ~hit[i]
+            eng_ref = gate(miss & send_page, eng_ref,
+                           schedule_page(eng_ref, pid, clock, clock + cost))
+            eng_ref = gate(miss & send_line, eng_ref,
+                           schedule_line(eng_ref, pid, i % 64, clock))
+        np.testing.assert_array_equal(np.asarray(state.eng.page_key),
+                                      np.asarray(eng_ref.page_key))
+        np.testing.assert_array_equal(np.asarray(state.eng.sb_key),
+                                      np.asarray(eng_ref.sb_key))
+        np.testing.assert_array_equal(np.asarray(state.eng.page_arrival),
+                                      np.asarray(eng_ref.page_arrival))
+
+
+def test_store_inflight_pages_dedup_and_land():
+    cfg = KVStoreConfig(num_local_pages=4, page_tokens=8, kv_heads=2,
+                        head_dim=16, page_budget_per_step=4)
+    state = init_kv_store(cfg)
+    remote = jnp.zeros((8, 8, 2, 16), jnp.float32)
+    need = jnp.asarray([5, 5, 6], jnp.int32)
+    state, _, _, hit = step_fetch(state, cfg, remote, remote, need)
+    live = np.asarray(state.eng.page_key)
+    live = live[live >= 0]
+    assert sorted(live.tolist()) == [5, 6]       # same-step dup deduped
+    assert not bool(hit.any())
+    for _ in range(page_cost_steps(cfg) + 1):
+        state, _, _, hit = step_fetch(state, cfg, remote, remote, need)
+    assert bool(hit.all())                       # pages landed locally
+    assert float(state.stats["page_moves"]) == 2.0
