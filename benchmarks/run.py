@@ -1,19 +1,25 @@
 """Benchmark aggregator: one function per paper table/figure + roofline.
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig8,...]
-Emits CSV blocks per figure and the paper-claim validation summary.
+Emits CSV blocks per figure and the paper-claim validation summary, plus
+`BENCH_serve.json` (machine-readable batched-store serving metrics:
+tokens/s, wire bytes, hit ratio) when the `serve` sweep runs.
 Trace length via REPRO_BENCH_R (default 60000).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
+from pathlib import Path
 
 import numpy as np
 
-from benchmarks import figures, roofline
+from benchmarks import figures, roofline, serving
 from benchmarks.common import ORDER
 from benchmarks.validate import check
+
+BENCH_SERVE_JSON = Path("BENCH_serve.json")
 
 
 def main() -> None:
@@ -75,6 +81,13 @@ def main() -> None:
         figures.fig20_switch_latency(r)
     if want("fig21"):
         figures.fig21_bw_factor(r)
+    if want("serve"):
+        sv = serving.serve_sweep(quick=args.quick)
+        BENCH_SERVE_JSON.write_text(json.dumps(sv, indent=2) + "\n")
+        print(f"# BENCH_serve.json written: "
+              f"{sv['tokens_per_s']:.0f} tok/s, "
+              f"{sv['wire_bytes']/1e6:.2f}MB wire, "
+              f"hit {sv['hit_ratio']:.3f}")
     if want("roofline"):
         roofline.main()
 

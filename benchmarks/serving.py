@@ -1,0 +1,122 @@
+"""Batched multi-tenant serving sweep on the movement fabric.
+
+The serving-side analogue of the paper's multiple-memory-component
+results (fig 17/22): B tenant sequences decode against M disaggregated
+memory modules sharing ONE movement fabric, each tenant streaming
+zipf-skewed page requests over its own region of the remote KV pool.
+Reports store-stepping throughput (tokens/s), wire bytes, and hit ratio
+per (movement style, M, placement) — DaeMon movement (compressed page
+plane + critical sub-blocks + fabric-pressure-aware selection) vs
+Remote-style (uncompressed) — and emits the machine-readable
+`BENCH_serve.json` the CI smoke job records.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_print
+from repro.core.daemon_store import (KVStoreConfig, init_kv_store_batch,
+                                     ledger, step_fetch_batch)
+from repro.core.fabric import FabricConfig
+
+BATCH = 4                 # tenant sequences (acceptance: B >= 4)
+WIDTH = 4                 # page requests per tenant per decode step
+PAGES_PER_TENANT = 64     # remote-pool region per tenant
+
+SWEEP = (
+    # (label, compress, modules, placement)
+    ("daemon", True, 1, "interleave"),
+    ("daemon", True, 2, "interleave"),
+    ("daemon", True, 4, "interleave"),
+    ("daemon", True, 4, "hash"),
+    ("daemon", True, 4, "affinity"),
+    ("remote-style", False, 4, "interleave"),
+)
+
+
+def _store_cfg(compress: bool, modules: int, placement: str
+               ) -> KVStoreConfig:
+    return KVStoreConfig(
+        num_local_pages=16, page_tokens=16, kv_heads=4, head_dim=64,
+        compress_pages=compress, page_budget_per_step=8,
+        fabric=FabricConfig(num_modules=modules, placement=placement,
+                            affinity_block=PAGES_PER_TENANT))
+
+
+def _tenant_streams(steps: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    zipf = (rng.zipf(1.3, size=(steps, BATCH, WIDTH))
+            .clip(1, PAGES_PER_TENANT) - 1).astype(np.int32)
+    base = (np.arange(BATCH, dtype=np.int32)
+            * PAGES_PER_TENANT)[None, :, None]
+    offs = rng.integers(0, 16, size=(steps, BATCH, WIDTH)).astype(np.int32)
+    return zipf + base, offs
+
+
+def _run_one(cfg: KVStoreConfig, pages, offs) -> dict:
+    steps = pages.shape[0]
+    n_remote = BATCH * PAGES_PER_TENANT
+    remote = jnp.zeros((n_remote, cfg.page_tokens, cfg.kv_heads,
+                        cfg.head_dim), jnp.bfloat16)
+    fetch = jax.jit(lambda s, need, off: step_fetch_batch(
+        s, cfg, remote, remote, need, off))
+    state = init_kv_store_batch(cfg, BATCH)
+    state, *_ = fetch(state, jnp.asarray(pages[0]),
+                      jnp.asarray(offs[0]))           # compile + warm
+    jax.block_until_ready(state.fab.page_busy)
+    t0 = time.time()
+    for t in range(1, steps):
+        state, *_ = fetch(state, jnp.asarray(pages[t]),
+                          jnp.asarray(offs[t]))
+    jax.block_until_ready(state.fab.page_busy)
+    wall = time.time() - t0
+    led = ledger(state)
+    decoded = BATCH * (steps - 1)
+    return {
+        "tokens_per_s": decoded / max(wall, 1e-9),
+        "wire_bytes": led["wire_bytes"],
+        "uncompressed_bytes": led["uncompressed_bytes"],
+        "hit_ratio": led["local_hits"] / max(led["requests"], 1.0),
+        "page_moves": led["page_moves"],
+        "sub_block_fetches": led["sub_block_fetches"],
+        "module_bytes": led["module_bytes"],
+    }
+
+
+def serve_sweep(quick: bool = False, steps: int = None) -> dict:
+    steps = steps or (150 if quick else 400)
+    pages, offs = _tenant_streams(steps)
+    rows = []
+    results = []
+    for label, compress, modules, placement in SWEEP:
+        res = _run_one(_store_cfg(compress, modules, placement), pages,
+                       offs)
+        res.update(label=label, modules=modules, placement=placement)
+        results.append(res)
+        rows.append([label, modules, placement,
+                     round(res["tokens_per_s"], 1),
+                     round(res["wire_bytes"] / 1e6, 3),
+                     round(res["hit_ratio"], 4),
+                     "/".join(f"{b/1e6:.2f}"
+                              for b in res["module_bytes"])])
+    csv_print(f"serve: batched store, B={BATCH} tenants x M modules "
+              "(daemon vs remote-style wire bytes at equal service)",
+              ["scheme", "modules", "placement", "tokens_per_s",
+               "wire_MB", "hit_ratio", "per_module_MB"], rows)
+    daemon4 = next(r for r in results
+                   if r["label"] == "daemon" and r["modules"] == 4
+                   and r["placement"] == "interleave")
+    remote4 = next(r for r in results if r["label"] == "remote-style")
+    return {
+        "batch": BATCH, "steps": steps, "quick": quick,
+        "tokens_per_s": daemon4["tokens_per_s"],
+        "wire_bytes": daemon4["wire_bytes"],
+        "hit_ratio": daemon4["hit_ratio"],
+        "daemon_vs_remote_wire_ratio":
+            daemon4["wire_bytes"] / max(remote4["wire_bytes"], 1e-9),
+        "rows": results,
+    }

@@ -1,16 +1,19 @@
 """DaeMon paged-KV serving: generation + movement-ledger comparison.
 
-Runs batched decode twice with the two-tier DaemonKVStore handling KV page
-residency: once DaeMon-style (critical sub-block fetches + compressed page
-migrations + adaptive selection) and once Remote-style (uncompressed
-page-only movement), and reports wire bytes + hit ratios — the serving
-analogue of paper fig 8/19.
+Runs batched decode with the two-tier DaemonKVStore handling KV page
+residency — B tenant sequences against M memory modules on ONE movement
+fabric (`repro.core.fabric`) — twice: once DaeMon-style (critical
+sub-block fetches + compressed page migrations + adaptive selection) and
+once Remote-style (uncompressed page-only movement), and reports wire
+bytes + hit ratios per tenant and per module — the serving analogue of
+paper fig 8/17/19.
 
 The store's movement plane is the same `repro.core.engine` selection +
-inflight machinery the simulator uses: a miss whose page is already
-inflight and issued rides the in-flight page instead of re-fetching its
-critical token every step (§4.2 race rule), so sub-block counts reflect
-line-plane traffic, not raw miss counts.
+inflight machinery and the same `fabric.serve_dual_at` channel service
+the simulator uses: page arrival times are real (possibly congested)
+channel completions, a miss whose page is already inflight and issued
+rides the in-flight page (§4.2 race rule), and a hot module delays every
+tenant's landings.
 
   PYTHONPATH=src python examples/serve_paged.py
 """
@@ -24,51 +27,78 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.daemon_store import (KVStoreConfig, init_kv_store,
-                                     step_fetch)
+from repro.core.daemon_store import (KVStoreConfig, init_kv_store_batch,
+                                     ledger, step_fetch_batch)
+from repro.core.fabric import FabricConfig
 from repro.models.model import ModelOptions, init_model
-from repro.runtime.serve_loop import ServeConfig, serve_batch
+from repro.runtime.serve_loop import (PagedServeConfig, ServeConfig,
+                                      serve_batch_paged)
+
+BATCH = 4
+MODULES = 4
 
 
-def kv_movement_ledger(compress: bool, steps: int = 120):
-    """Replay a zipf page-access stream through the two-tier store."""
+def kv_movement_ledger(compress: bool, steps: int = 120,
+                       placement: str = "interleave"):
+    """Replay zipf page-access streams for BATCH tenants through the
+    two-tier store sharing one MODULES-wide fabric."""
     cfg = KVStoreConfig(num_local_pages=16, page_tokens=16, kv_heads=4,
                         head_dim=64, compress_pages=compress,
-                        page_budget_per_step=8)
-    state = init_kv_store(cfg)
+                        page_budget_per_step=8,
+                        fabric=FabricConfig(num_modules=MODULES,
+                                            placement=placement))
+    state = init_kv_store_batch(cfg, BATCH)
     key = jax.random.PRNGKey(0)
     remote_k = jax.random.normal(key, (64, 16, 4, 64), jnp.float32)
     remote_v = jax.random.normal(jax.random.fold_in(key, 1),
                                  (64, 16, 4, 64), jnp.float32)
     rng = np.random.default_rng(0)
-    pages = (rng.zipf(1.4, size=(steps, 4)).clip(1, 64) - 1).astype(
+    pages = (rng.zipf(1.4, size=(steps, BATCH, 4)).clip(1, 64) - 1).astype(
         np.int32)
-    fetch = jax.jit(lambda st, need: step_fetch(st, cfg, remote_k,
-                                                remote_v, need))
+    offs = rng.integers(0, 16, size=(steps, BATCH, 4)).astype(np.int32)
+    fetch = jax.jit(lambda st, need, off: step_fetch_batch(
+        st, cfg, remote_k, remote_v, need, off))
     for t in range(steps):
-        state, k, v, hit = fetch(state, jnp.asarray(pages[t]))
-    return {k: float(v) for k, v in state.stats.items()}
+        state, k, v, hit = fetch(state, jnp.asarray(pages[t]),
+                                 jnp.asarray(offs[t]))
+    return ledger(state)
 
 
 def main():
-    print("== generation (reduced qwen3-1.7b) ==")
+    print(f"== generation with paged-KV movement plane "
+          f"(reduced qwen3-1.7b, B={BATCH}, M={MODULES}) ==")
     cfg = get_config("qwen3-1.7b").reduced()
     params, _ = init_model(jax.random.PRNGKey(0), cfg)
-    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 2, 200,
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (BATCH, 6), 2, 200,
                                  jnp.int32)
-    out = serve_batch(params, cfg, prompts, ServeConfig(max_new_tokens=10))
+    store_cfg = KVStoreConfig(
+        num_local_pages=8, page_tokens=4, kv_heads=2, head_dim=32,
+        page_budget_per_step=4,
+        fabric=FabricConfig(num_modules=MODULES, placement="affinity",
+                            affinity_block=8))
+    out, led = serve_batch_paged(params, cfg, prompts,
+                                 ServeConfig(max_new_tokens=10), store_cfg,
+                                 PagedServeConfig(window_pages=2,
+                                                  pages_per_seq=8))
     for row in out:
         print("  gen:", row.tolist())
+    hr = led["local_hits"] / max(led["requests"], 1)
+    print(f"  decode movement: wire={led['wire_bytes']/1e3:.1f}KB "
+          f"pages={led['page_moves']:.0f} "
+          f"sub_blocks={led['sub_block_fetches']:.0f} hit={hr:.2f}")
 
-    print("\n== DaeMon KV movement ledger vs Remote-style ==")
+    print(f"\n== DaeMon KV movement ledger vs Remote-style "
+          f"(B={BATCH} tenants x M={MODULES} modules) ==")
     daemon = kv_movement_ledger(compress=True)
     remote = kv_movement_ledger(compress=False)
     for name, led in (("daemon", daemon), ("remote-style", remote)):
         hr = led["local_hits"] / max(led["requests"], 1)
+        per_mod = "/".join(f"{b/1e6:.2f}" for b in led["module_bytes"])
         print(f"  {name:13s} wire={led['wire_bytes']/1e6:7.2f}MB "
               f"(raw {led['uncompressed_bytes']/1e6:7.2f}MB) "
               f"pages={led['page_moves']:.0f} "
-              f"sub_blocks={led['sub_block_fetches']:.0f} hit={hr:.2f}")
+              f"sub_blocks={led['sub_block_fetches']:.0f} hit={hr:.2f} "
+              f"per-module MB={per_mod}")
     saving = 1 - daemon["wire_bytes"] / remote["wire_bytes"]
     print(f"  => DaeMon moves {saving*100:.1f}% fewer wire bytes at equal "
           "service (compressed page plane + critical sub-blocks)")

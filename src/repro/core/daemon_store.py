@@ -1,29 +1,47 @@
 """DaemonKVStore: two-tier paged KV cache with DaeMon movement policies.
 
 The serving-side integration of the paper: a small *local* (HBM) page pool
-holds hot KV pages; the full KV lives in the *remote* tier (host memory or
-remote pods — here a jnp array standing in for the remote pool, with
-transfers accounted by the movement planner). Per decode step the engine:
+holds hot KV pages per sequence; the full KV lives in the *remote* tier
+(host memory or remote pods — here a jnp array standing in for the remote
+pool, with transfers accounted by the movement planner). Per decode step
+the engine:
 
   1. looks the needed pages up in the local page table (CAM-equivalent),
   2. serves misses through the *sub-block plane* (single-token critical
      fetch, `kernels.paged_gather`) immediately,
-  3. schedules *page plane* migrations for the missed pages under the
-     bandwidth budget (bw_ratio-partitioned, int8-compressed — §4.1/§4.4),
-  4. adapts granularity to the inflight-buffer occupancies (§4.2).
+  3. schedules *page plane* migrations through the shared movement fabric
+     (`repro.core.fabric`): per-module bw_ratio-partitioned virtual
+     channels, int8-compressed payloads — §4.1/§4.4,
+  4. adapts granularity to the inflight-buffer occupancies AND the target
+     module's channel backlog (§4.2 + fabric pressure).
 
-The inflight-buffer + selection machinery is NOT reimplemented here: the
-store embeds a ``repro.core.engine.EngineState`` and routes every decision
-through ``select_granularity`` / ``schedule_page`` / ``schedule_line`` /
-``poll_arrivals`` / ``retire_arrivals`` — the same primitives the
-simulator's per-request transition uses, so the serving path and the
-simulator cannot diverge on movement semantics by construction (the clock
-is the decode-step counter instead of nanoseconds; pages are issued on
-schedule and arrive after their partitioned-budget service steps).
+Neither the inflight-buffer machinery nor the channel arithmetic is
+reimplemented here: the store embeds a ``repro.core.engine.EngineState``
+per sequence and a ``repro.core.fabric.FabricState`` shared by the whole
+batch, and routes every decision through ``select_granularity`` /
+``schedule_page`` / ``schedule_line`` / ``poll_arrivals`` /
+``retire_arrivals`` and every transfer through ``fabric.serve_dual_at``
+(itself a thin per-module wrapper over ``bandwidth.serve_dual``) — the
+same primitives the simulator's per-request transition uses, so the
+serving path and the simulator cannot diverge on module routing, channel
+arithmetic, or buffer semantics by construction. The clock is the
+decode-step counter; page arrival times are real channel-service
+completions, so congestion on a module's page channel delays landings
+exactly as in the simulator. One deliberate serving-side extension: the
+store feeds ``fabric.backlog`` into ``select_granularity`` as
+``module_pressure`` (the simulator keeps the paper's pressure-free §4.2
+rule, pinned by the seed golden capture).
 
-All state is a pytree; `step_fetch` is jit/scan-friendly. The byte ledger
-(`stats`) is what examples/serve_paged.py reports against the Remote
-(page-only) baseline.
+Multi-tenant batching: ``step_fetch_batch`` carries B independent
+sequences (own pool, page table, engine, ledger — a leading batch axis on
+``SeqState``) against ONE fabric: landing/lookup/serve are ``vmap``ped
+across the batch, then scheduling folds over the batch in sequence order
+so all B engines contend for the same per-module channels
+deterministically. ``step_fetch`` is the single-sequence wrapper.
+
+All state is a pytree; both steppers are jit/scan-friendly. The byte
+ledger (`stats` + the fabric's per-module byte counters) is what
+examples/serve_paged.py reports against the Remote (page-only) baseline.
 """
 from __future__ import annotations
 
@@ -33,10 +51,12 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import bandwidth, fabric
 from repro.core.engine import (EngineState, gate_tree as _gate_tree,
                                init_engine_state, poll_arrivals,
                                retire_arrivals, schedule_line,
                                schedule_page, select_granularity)
+from repro.core.fabric import FabricConfig, FabricState
 from repro.core.params import DaemonParams
 from repro.kernels import ops
 
@@ -45,151 +65,369 @@ F32 = jnp.float32
 
 @dataclass(frozen=True)
 class KVStoreConfig:
-    num_local_pages: int          # HBM pool slots
+    num_local_pages: int          # HBM pool slots (per sequence)
     page_tokens: int              # tokens per page
     kv_heads: int
     head_dim: int
     daemon: DaemonParams = DaemonParams()
     compress_pages: bool = True   # int8 link compression on page moves
-    page_budget_per_step: int = 4  # page-plane slots per decode step
+    page_budget_per_step: int = 4  # page-plane raw tokens drained per step
     selection: bool = True        # §4.2 adaptive granularity (else both)
+    fabric: FabricConfig = FabricConfig()  # modules + placement
 
 
-class KVStoreState(NamedTuple):
+class SeqState(NamedTuple):
+    """Per-sequence tier state. In a batched store every leaf carries a
+    leading (B,) axis; the fabric is deliberately NOT in here — it is the
+    shared resource the batch contends for."""
     # local pool: (N, page, KV, D) x2 (k, v)
     kpool: jnp.ndarray
     vpool: jnp.ndarray
     # local page table: remote page id resident in each slot (-1 empty)
     slot_page: jnp.ndarray        # (N,) int32
     slot_age: jnp.ndarray         # (N,) f32 (LRU clock)
-    # shared DaeMon movement plane (inflight page + sub-block CAMs, §4.2)
+    # DaeMon movement plane (inflight page + sub-block CAMs, §4.2)
     eng: EngineState
-    clock: jnp.ndarray            # scalar step counter
     stats: dict
 
 
-def init_kv_store(cfg: KVStoreConfig) -> KVStoreState:
+class KVStoreState(NamedTuple):
+    seq: SeqState
+    fab: FabricState              # per-module channel bank + byte ledgers
+    clock: jnp.ndarray            # scalar step counter
+
+    # convenience passthroughs (callers read movement state directly)
+    @property
+    def eng(self) -> EngineState:
+        return self.seq.eng
+
+    @property
+    def stats(self) -> dict:
+        return self.seq.stats
+
+    @property
+    def slot_page(self) -> jnp.ndarray:
+        return self.seq.slot_page
+
+    @property
+    def slot_age(self) -> jnp.ndarray:
+        return self.seq.slot_age
+
+    @property
+    def kpool(self) -> jnp.ndarray:
+        return self.seq.kpool
+
+    @property
+    def vpool(self) -> jnp.ndarray:
+        return self.seq.vpool
+
+
+class BatchedKVStoreState(NamedTuple):
+    seqs: SeqState                # leaves have a leading (B,) axis
+    fab: FabricState              # ONE bank shared by the whole batch
+    clock: jnp.ndarray
+
+    @property
+    def stats(self) -> dict:
+        return self.seqs.stats
+
+
+STAT_KEYS = ("sub_block_fetches", "page_moves", "wire_bytes",
+             "uncompressed_bytes", "local_hits", "requests")
+
+
+def _init_seq(cfg: KVStoreConfig) -> SeqState:
     n = cfg.num_local_pages
     shape = (n, cfg.page_tokens, cfg.kv_heads, cfg.head_dim)
-    return KVStoreState(
+    return SeqState(
         kpool=jnp.zeros(shape, jnp.bfloat16),
         vpool=jnp.zeros(shape, jnp.bfloat16),
         slot_page=jnp.full((n,), -1, jnp.int32),
         slot_age=jnp.zeros((n,), F32),
         eng=init_engine_state(cfg.daemon),
-        clock=jnp.zeros((), F32),
-        stats={k: jnp.zeros((), F32) for k in
-               ("sub_block_fetches", "page_moves", "wire_bytes",
-                "uncompressed_bytes", "local_hits", "requests")},
+        stats={k: jnp.zeros((), F32) for k in STAT_KEYS},
     )
 
 
+def init_kv_store(cfg: KVStoreConfig) -> KVStoreState:
+    return KVStoreState(seq=_init_seq(cfg),
+                        fab=fabric.init_fabric(cfg.fabric),
+                        clock=jnp.zeros((), F32))
+
+
+def init_kv_store_batch(cfg: KVStoreConfig, batch: int
+                        ) -> BatchedKVStoreState:
+    seq = _init_seq(cfg)
+    seqs = jax.tree.map(lambda x: jnp.stack([x] * batch), seq)
+    return BatchedKVStoreState(seqs=seqs, fab=fabric.init_fabric(cfg.fabric),
+                               clock=jnp.zeros((), F32))
+
+
+def _token_bytes(cfg: KVStoreConfig) -> float:
+    return float(cfg.kv_heads * cfg.head_dim * 2 * 2)  # k+v bf16
+
+
 def _wire_bytes(cfg: KVStoreConfig, tokens: int, compressed: bool) -> float:
-    raw = tokens * cfg.kv_heads * cfg.head_dim * 2 * 2  # k+v bf16
+    raw = tokens * _token_bytes(cfg)
     if not compressed:
         return float(raw)
     # int8 payload + one f32 scale per 256-block
     return float(raw / 2 + raw / 2 / 256 * 4)
 
 
+def link_bytes_per_step(cfg: KVStoreConfig) -> float:
+    """Per-module physical link bandwidth in bytes per decode step.
+
+    Sized so the page channel's (1 - bw_ratio) share drains exactly
+    `page_budget_per_step` raw tokens per step — the partitioned-budget
+    semantics the store always had, now expressed as channel bandwidth
+    instead of a fixed per-page cost."""
+    r = cfg.daemon.bw_ratio
+    return cfg.page_budget_per_step * _token_bytes(cfg) / (1.0 - r)
+
+
 def page_cost_steps(cfg: KVStoreConfig) -> int:
-    """Page-plane service time in decode steps, from the partitioned
-    budget (§4.1): a page of `page_tokens` drains `page_budget_per_step`
-    token-slots of link time per step."""
+    """Nominal (uncongested, UNcompressed) page service time in decode
+    steps. No longer an arrival time — arrivals come from the fabric's
+    real channel service, and a compressed page on an idle channel lands
+    in roughly half this — just the natural normalizer for module
+    pressure and the scale tests wait on before expecting landings."""
     return max(1, round(cfg.page_tokens / cfg.page_budget_per_step))
 
 
-def step_fetch(state: KVStoreState, cfg: KVStoreConfig,
-               remote_k, remote_v, needed_pages):
-    """Serve one decode step needing `needed_pages` (R,) page ids.
+# ------------------------------------------------------------ landing
+def _land(seq: SeqState, cfg: KVStoreConfig, remote_k, remote_v, clock
+          ) -> SeqState:
+    """Land arrived pages into LRU victim slots.
 
-    Returns (state, k (R,page,KV,D), v, served_local (R,) bool).
-    Misses are served via the sub-block plane from the remote tier now;
-    page migrations go through the shared §4.2 selection unit and land
-    after their partitioned-budget service steps. A miss whose page is
-    already inflight and issued moves no extra wire bytes — the request
-    rides the page already in flight (exactly the simulator's race rule).
+    Landed inflight entries are compacted to the front so the remote tier
+    is gathered ONCE for at most min(P, N) actually-landed pages —
+    previously every one of the P inflight slots paid a full K+V page
+    gather every step, landed or not — and the whole landing body is
+    skipped (`lax.cond`) on the common steady-state steps where nothing
+    arrives (under the batched path's `vmap` the cond lowers to a select,
+    so there it costs one bounded gather per step). The j-th landed entry
+    (slot order) takes the j-th lowest-age victim — the sequential
+    argmin-with-updates order of a per-slot scan.
+
+    More than N pages landing on one step (possible with a wide fabric
+    and budgets >= page_tokens) lands the first N in slot order; the
+    excess entries are retired un-landed — a dropped migration, like the
+    simulator's `page_drops`. The pool is a cache, so a later touch just
+    re-requests them; their wire bytes were genuinely spent.
     """
-    r = needed_pages.shape[0]
-    clock = state.clock + 1.0
-    cost = float(page_cost_steps(cfg))
+    landed, landed_pages = poll_arrivals(seq.eng, clock)
+    p = int(landed.shape[0])
+    k_land = min(p, cfg.num_local_pages)
 
-    # --- land arrived pages into LRU victim slots (engine says which) ---
-    landed, landed_pages = poll_arrivals(state.eng, clock)
+    def do_land(seq):
+        order = jnp.argsort(jnp.logical_not(landed).astype(jnp.int32),
+                            stable=True)
+        pick = order[:k_land]
+        do = landed[pick]
+        pids = landed_pages[pick]
+        page_k = ops.paged_gather(remote_k, jnp.maximum(pids, 0)).astype(
+            seq.kpool.dtype)
+        page_v = ops.paged_gather(remote_v, jnp.maximum(pids, 0)).astype(
+            seq.vpool.dtype)
+        victims = jnp.argsort(seq.slot_age, stable=True)[:k_land]
 
-    def land_one(carry, i):
-        sp, sa, kp, vp = carry
-        pid = landed_pages[i]
-        do = landed[i]
-        victim = jnp.argmin(sa)
-        page_k = ops.paged_gather(remote_k,
-                                  jnp.maximum(pid, 0)[None])[0].astype(
-                                      kp.dtype)
-        page_v = ops.paged_gather(remote_v,
-                                  jnp.maximum(pid, 0)[None])[0].astype(
-                                      vp.dtype)
-        sp = sp.at[victim].set(jnp.where(do, pid, sp[victim]))
-        sa = sa.at[victim].set(jnp.where(do, clock, sa[victim]))
-        kp = kp.at[victim].set(jnp.where(do, page_k, kp[victim]))
-        vp = vp.at[victim].set(jnp.where(do, page_v, vp[victim]))
-        return (sp, sa, kp, vp), None
+        def put(tbl, val):
+            gate = do.reshape((-1,) + (1,) * (tbl.ndim - 1))
+            return tbl.at[victims].set(jnp.where(gate, val, tbl[victims]))
 
-    (slot_page, slot_age, kpool, vpool), _ = jax.lax.scan(
-        land_one, (state.slot_page, state.slot_age, state.kpool,
-                   state.vpool), jnp.arange(state.eng.page_key.shape[0]))
-    eng = retire_arrivals(state.eng, clock)
+        return seq._replace(
+            slot_page=put(seq.slot_page, pids),
+            slot_age=put(seq.slot_age, jnp.broadcast_to(clock, (k_land,))),
+            kpool=put(seq.kpool, page_k),
+            vpool=put(seq.vpool, page_v),
+        )
 
-    # --- local lookup (vectorized CAM) — after landing, so a page that
-    # arrives this step hits immediately (desim: tbl_valid <= t_issue) ---
-    eq = slot_page[None, :] == needed_pages[:, None]         # (R, N)
+    seq = jax.lax.cond(jnp.any(landed), do_land, lambda s: s, seq)
+    return seq._replace(eng=retire_arrivals(seq.eng, clock))
+
+
+# ------------------------------------------------------------- lookup
+def _lookup(seq: SeqState, clock, needed_pages):
+    """Vectorized CAM lookup + local-pool serve — after landing, so a page
+    that arrives this step hits immediately (desim: tbl_valid <= t_issue).
+    """
+    eq = seq.slot_page[None, :] == needed_pages[:, None]     # (R, N)
     local_hit = jnp.any(eq, axis=1)
     slot = jnp.argmax(eq, axis=1)
+    k_local = ops.paged_gather(seq.kpool, jnp.maximum(slot, 0))
+    v_local = ops.paged_gather(seq.vpool, jnp.maximum(slot, 0))
+    slot_age = seq.slot_age.at[slot].max(jnp.where(local_hit, clock, 0.0))
+    return seq._replace(slot_age=slot_age), k_local, v_local, local_hit
 
-    # --- serve: hits from the pool, misses via sub-block critical fetch ---
-    k_local = ops.paged_gather(kpool, jnp.maximum(slot, 0))
-    v_local = ops.paged_gather(vpool, jnp.maximum(slot, 0))
-    k_remote = ops.paged_gather(remote_k, needed_pages)
-    v_remote = ops.paged_gather(remote_v, needed_pages)
-    sel = local_hit[:, None, None, None]
-    k = jnp.where(sel, k_local, k_remote)
-    v = jnp.where(sel, v_local, v_remote)
-    slot_age = slot_age.at[slot].max(jnp.where(local_hit, clock, 0.0))
 
-    # --- §4.2: route every miss through the shared selection unit and
-    # schedule through the shared inflight buffers (sequential within the
-    # step, so same-page requests dedup exactly like the simulator) ---
-    def sched_one(eng, i):
+def _remote_fetch(remote_k, remote_v, pages_flat, any_miss):
+    """Sub-block critical fetch from the remote tier for missed requests.
+
+    `lax.cond` skips the gather entirely on 100%-hit steps (a real branch
+    under jit and inside scan bodies — steady-state decode steps with a
+    warm pool do zero remote reads)."""
+    shape = (pages_flat.shape[0],) + tuple(remote_k.shape[1:])
+
+    def hit_path(_):
+        return (jnp.zeros(shape, remote_k.dtype),
+                jnp.zeros(shape, remote_v.dtype))
+
+    def miss_path(_):
+        return (ops.paged_gather(remote_k, pages_flat),
+                ops.paged_gather(remote_v, pages_flat))
+
+    return jax.lax.cond(any_miss, miss_path, hit_path, None)
+
+
+# ---------------------------------------------------------- scheduling
+def _schedule(seq: SeqState, fab: FabricState, cfg: KVStoreConfig,
+              needed_pages, needed_offsets, local_hit, clock
+              ) -> Tuple[SeqState, FabricState]:
+    """Route every miss through the shared §4.2 selection unit and serve
+    its transfers on the shared fabric (sequential within the step, so
+    same-page requests dedup and queue exactly like the simulator).
+
+    Arrival times are the fabric's `serve_dual` completions; the page's
+    issue time is its transmission *start* (desim's `pn_start`), so a
+    page queued behind a congested module can still be raced by lines.
+    """
+    r = needed_pages.shape[0]
+    dp = cfg.daemon
+    bw = link_bytes_per_step(cfg)
+    nominal = float(page_cost_steps(cfg))
+    line_wire = _wire_bytes(cfg, 1, False)            # critical token, raw
+    page_wire = _wire_bytes(cfg, cfg.page_tokens, cfg.compress_pages)
+    _, page_share = bandwidth.shares(True, dp.bw_ratio)
+
+    def sched_one(carry, i):
+        eng, fab = carry
         pid = needed_pages[i]
+        off = needed_offsets[i] % 64
+        mc = fabric.place(cfg.fabric, pid)
+        _, page_backlog = fabric.backlog(fab, mc, clock)
+        pressure = page_backlog / (page_backlog + nominal)
         send_line, send_page = select_granularity(
             eng, pid, clock, selection_enabled=cfg.selection,
-            always_both=not cfg.selection)
+            always_both=not cfg.selection, module_pressure=pressure)
         miss = ~local_hit[i]
         do_page = miss & send_page
         do_line = miss & send_line
+        fab, line_done, page_done = fabric.serve_dual_at(
+            fab, mc, partition=True, ratio=dp.bw_ratio, bw=bw,
+            line_ready=clock, line_bytes=line_wire, line_gate=do_line,
+            page_ready=clock, page_bytes=page_wire, page_gate=do_page)
+        page_start = page_done - page_wire / jnp.maximum(
+            bw * page_share, 1e-6)
         eng = _gate_tree(do_page, eng,
-                         schedule_page(eng, pid, clock, clock + cost))
+                         schedule_page(eng, pid, page_start, page_done))
         eng = _gate_tree(do_line, eng,
-                         schedule_line(eng, pid, i % 64, clock))
-        return eng, (do_line, do_page)
+                         schedule_line(eng, pid, off, line_done))
+        return (eng, fab), (do_line, do_page)
 
-    eng, (line_sent, scheduled) = jax.lax.scan(sched_one, eng,
-                                               jnp.arange(r))
+    (eng, fab), (line_sent, scheduled) = jax.lax.scan(
+        sched_one, (seq.eng, fab), jnp.arange(r))
 
     n_sub = jnp.sum(line_sent)
     n_sched = jnp.sum(scheduled)
-    sub_bytes = n_sub * _wire_bytes(cfg, 1, False)        # critical tokens
-    page_bytes = n_sched * _wire_bytes(cfg, cfg.page_tokens,
-                                       cfg.compress_pages)
+    sub_bytes = n_sub * line_wire
+    stt = seq.stats
     stats = {
-        "sub_block_fetches": state.stats["sub_block_fetches"] + n_sub,
-        "page_moves": state.stats["page_moves"] + n_sched,
-        "wire_bytes": state.stats["wire_bytes"] + sub_bytes + page_bytes,
-        "uncompressed_bytes": state.stats["uncompressed_bytes"] + sub_bytes
+        "sub_block_fetches": stt["sub_block_fetches"] + n_sub,
+        "page_moves": stt["page_moves"] + n_sched,
+        "wire_bytes": stt["wire_bytes"] + sub_bytes + n_sched * page_wire,
+        "uncompressed_bytes": stt["uncompressed_bytes"] + sub_bytes
         + n_sched * _wire_bytes(cfg, cfg.page_tokens, False),
-        "local_hits": state.stats["local_hits"] + jnp.sum(local_hit),
-        "requests": state.stats["requests"] + r,
+        "local_hits": stt["local_hits"] + jnp.sum(local_hit),
+        "requests": stt["requests"] + r,
     }
-    new_state = KVStoreState(kpool=kpool, vpool=vpool, slot_page=slot_page,
-                             slot_age=slot_age, eng=eng, clock=clock,
-                             stats=stats)
-    return new_state, k, v, local_hit
+    return seq._replace(eng=eng, stats=stats), fab
+
+
+def _offsets_or_zero(needed_pages, needed_offsets):
+    if needed_offsets is None:
+        return jnp.zeros(needed_pages.shape, jnp.int32)
+    return jnp.asarray(needed_offsets, jnp.int32)
+
+
+# ------------------------------------------------------------- steppers
+def step_fetch(state: KVStoreState, cfg: KVStoreConfig,
+               remote_k, remote_v, needed_pages, needed_offsets=None):
+    """Serve one decode step needing `needed_pages` (R,) page ids.
+
+    `needed_offsets` (R,) are the requests' token offsets within their
+    pages — the sub-block plane keys on the same packed (page<<6|off)
+    the simulator uses, so repeat touches of one token dedup while
+    distinct tokens of one page race independently. Defaults to offset 0.
+
+    Returns (state, k (R,page,KV,D), v, served_local (R,) bool).
+    Misses are served via the sub-block plane from the remote tier now;
+    page migrations drain through the shared fabric's per-module page
+    channels and land when their (possibly congested) service completes.
+    A miss whose page is already inflight and issued moves no extra wire
+    bytes — the request rides the page already in flight (exactly the
+    simulator's race rule).
+    """
+    offs = _offsets_or_zero(needed_pages, needed_offsets)
+    clock = state.clock + 1.0
+    seq = _land(state.seq, cfg, remote_k, remote_v, clock)
+    seq, k_local, v_local, local_hit = _lookup(seq, clock, needed_pages)
+    k_remote, v_remote = _remote_fetch(remote_k, remote_v, needed_pages,
+                                       jnp.any(~local_hit))
+    sel = local_hit[:, None, None, None]
+    k = jnp.where(sel, k_local.astype(k_remote.dtype), k_remote)
+    v = jnp.where(sel, v_local.astype(v_remote.dtype), v_remote)
+    seq, fab = _schedule(seq, state.fab, cfg, needed_pages, offs,
+                         local_hit, clock)
+    return KVStoreState(seq=seq, fab=fab, clock=clock), k, v, local_hit
+
+
+def step_fetch_batch(state: BatchedKVStoreState, cfg: KVStoreConfig,
+                     remote_k, remote_v, needed_pages, needed_offsets=None):
+    """Serve one decode step for a whole batch: `needed_pages` (B, R).
+
+    Landing, lookup and the local serve are `vmap`ped across the B
+    sequences; the remote critical fetch is one batch-level gather
+    (skipped entirely when every request in the batch hits); scheduling
+    folds over the batch in sequence order with the ONE shared fabric as
+    carry — so tenants contend for the same per-module channels and a
+    hot module delays every sequence's landings, deterministically.
+
+    Returns (state, k (B,R,page,KV,D), v, served_local (B,R) bool).
+    """
+    b, r = needed_pages.shape
+    offs = _offsets_or_zero(needed_pages, needed_offsets)
+    clock = state.clock + 1.0
+    seqs = jax.vmap(lambda s: _land(s, cfg, remote_k, remote_v, clock))(
+        state.seqs)
+    seqs, k_local, v_local, local_hit = jax.vmap(
+        lambda s, need: _lookup(s, clock, need))(seqs, needed_pages)
+    k_remote, v_remote = _remote_fetch(remote_k, remote_v,
+                                       needed_pages.reshape(-1),
+                                       jnp.any(~local_hit))
+    k_remote = k_remote.reshape((b, r) + tuple(k_remote.shape[1:]))
+    v_remote = v_remote.reshape((b, r) + tuple(v_remote.shape[1:]))
+    sel = local_hit[:, :, None, None, None]
+    k = jnp.where(sel, k_local.astype(k_remote.dtype), k_remote)
+    v = jnp.where(sel, v_local.astype(v_remote.dtype), v_remote)
+
+    def sched_seq(fab, xs):
+        seq, need, off, hit = xs
+        seq, fab = _schedule(seq, fab, cfg, need, off, hit, clock)
+        return fab, seq
+
+    fab, seqs = jax.lax.scan(sched_seq, state.fab,
+                             (seqs, needed_pages, offs, local_hit))
+    return (BatchedKVStoreState(seqs=seqs, fab=fab, clock=clock),
+            k, v, local_hit)
+
+
+def ledger(state) -> dict:
+    """Python-side movement summary: stats totals (summed over the batch
+    for a BatchedKVStoreState) + the fabric's per-module wire bytes."""
+    seq = state.seq if isinstance(state, KVStoreState) else state.seqs
+    out = {k: float(jnp.sum(v)) for k, v in seq.stats.items()}
+    fab = state.fab
+    out["module_bytes"] = [
+        float(x) for x in fab.line_bytes + fab.page_bytes + fab.wb_bytes]
+    return out

@@ -83,7 +83,8 @@ def gate_tree(gate, old, new):
 
 # ------------------------------------------------------------- selection
 def select_granularity(st: EngineState, page_id, now=None, *,
-                       selection_enabled: bool, always_both: bool
+                       selection_enabled: bool, always_both: bool,
+                       module_pressure=0.0
                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """§4.2 selection granularity unit -> (send_line, send_page) bools.
 
@@ -95,7 +96,14 @@ def select_granularity(st: EngineState, page_id, now=None, *,
     * always_both (BP scheme) bypasses the selection logic (but still
       dedups inflight pages / full buffers).
 
-    Both mode switches are traceable (`where`-selected, not Python
+    `module_pressure` (traceable f32, in [0, 1)) is the queueing backlog
+    of the target memory module's page channel (see ``fabric.backlog``),
+    normalized by the caller: it biases the inflight race toward the line
+    plane — a page stuck behind a congested module is worth racing even
+    when the sub-block buffer is the fuller one. The default 0.0 recovers
+    the pressure-free paper rule.
+
+    All mode switches are traceable (`where`-selected, not Python
     branches), so one compiled program can serve every scheme.
     """
     page_found, pidx = find(st.page_key, page_id)
@@ -108,7 +116,8 @@ def select_granularity(st: EngineState, page_id, now=None, *,
     page_issued = jnp.where(page_found,
                             st.page_issue[pidx] <= now,
                             False)
-    line_if_inflight = jnp.logical_and(sb_util < page_util,
+    pressure = jnp.asarray(module_pressure, F32)
+    line_if_inflight = jnp.logical_and(sb_util < page_util + pressure,
                                        ~page_issued)
     selected = jnp.where(page_found, line_if_inflight, True)
     send_line = jnp.where(jnp.asarray(always_both, bool), True,

@@ -1,0 +1,157 @@
+"""Movement fabric: per-module channel banks + page->module placement.
+
+The paper's first scalability claim (§5, fig 17/22) is that per-unit
+DaeMon engines span *multiple* compute and memory components. This module
+is the shared substrate for that: a bank of dual-granularity virtual
+channels (line / page / writeback busy-until clocks, one set per memory
+module) plus the page->module placement policy. It is the ONLY home of
+
+  * module routing  — ``place`` replaces every inlined ``page % m``;
+  * channel state   — the simulator's five ``(M,)`` busy arrays and the
+    serving store's fixed ``page_cost_steps`` model both collapse into a
+    ``FabricState``;
+  * per-module wire accounting — every gated service call also feeds a
+    per-module byte ledger, so "sum of per-module bytes == total ledger"
+    is testable against both desim and the KV store.
+
+No busy-until arithmetic lives here: every service call delegates to
+``bandwidth.serve_dual`` / ``bandwidth.occupy_busy`` (the single home of
+channel arithmetic, DESIGN.md §1/§5). All transitions are pure pytree ->
+pytree and `where`-gated, so a fabric rides inside jitted scans and can be
+shared by a whole decode batch contending for the same channels.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import bandwidth
+
+F32 = jnp.float32
+
+PLACEMENTS = ("interleave", "hash", "affinity")
+
+# Knuth multiplicative hash constant, kept in int32 range after masking.
+_HASH_MULT = jnp.int32(-1640531527)  # 2654435769 as int32
+
+
+@dataclass(frozen=True)
+class FabricConfig:
+    """Static fabric shape: module count + placement policy.
+
+    Placement is static (it selects which routing *function* is traced);
+    everything downstream of it — channel clocks, gates, byte ledgers —
+    is traced data.
+    """
+    num_modules: int = 1
+    placement: str = "interleave"   # one of PLACEMENTS
+    affinity_block: int = 8         # contiguous pages per module (affinity)
+
+    def __post_init__(self):
+        if self.placement not in PLACEMENTS:
+            raise ValueError(f"placement must be one of {PLACEMENTS}, "
+                             f"got {self.placement!r}")
+        if self.num_modules < 1:
+            raise ValueError("num_modules must be >= 1")
+
+
+class FabricState(NamedTuple):
+    """Per-module channel bank. Leaves are (M,) f32."""
+    line_busy: jnp.ndarray      # line virtual channel busy-until
+    page_busy: jnp.ndarray      # page (or shared-FIFO) channel busy-until
+    wb_busy: jnp.ndarray        # writeback channel busy-until
+    line_bytes: jnp.ndarray     # per-module wire-byte ledgers
+    page_bytes: jnp.ndarray
+    wb_bytes: jnp.ndarray
+
+
+def init_fabric(cfg: FabricConfig) -> FabricState:
+    z = lambda: jnp.zeros((cfg.num_modules,), F32)
+    return FabricState(line_busy=z(), page_busy=z(), wb_busy=z(),
+                       line_bytes=z(), page_bytes=z(), wb_bytes=z())
+
+
+# ------------------------------------------------------------- placement
+def place(cfg: FabricConfig, page_id) -> jnp.ndarray:
+    """page id -> memory module (traceable int32).
+
+    interleave — round-robin by page id (the classic low-order striping;
+                 what desim inlined as ``page % m`` before the fabric).
+    hash       — multiplicative mix then fold: decorrelates module choice
+                 from strided access patterns.
+    affinity   — ``affinity_block`` consecutive pages share a module:
+                 sequential streams (KV pages of one sequence) stay on one
+                 module, distinct tenants land on distinct modules.
+    """
+    page_id = jnp.asarray(page_id, jnp.int32)
+    m = cfg.num_modules
+    if cfg.placement == "interleave":
+        return page_id % m
+    if cfg.placement == "hash":
+        mixed = (page_id * _HASH_MULT) & jnp.int32(0x7FFFFFFF)
+        return (mixed >> 8) % m
+    return (page_id // cfg.affinity_block) % m
+
+
+# ------------------------------------------------------------- occupancy
+def backlog(fab: FabricState, mc, now) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(line, page) queueing backlog of module `mc` at time `now` (>= 0).
+
+    This is the per-module occupancy pressure the §4.2 selection unit
+    consumes: how far beyond `now` each virtual channel is already
+    committed.
+    """
+    now = jnp.asarray(now, F32)
+    line = jnp.maximum(fab.line_busy[mc] - now, 0.0)
+    page = jnp.maximum(fab.page_busy[mc] - now, 0.0)
+    return line, page
+
+
+def total_bytes(fab: FabricState) -> jnp.ndarray:
+    """Total wire bytes across every module and channel."""
+    return (jnp.sum(fab.line_bytes) + jnp.sum(fab.page_bytes)
+            + jnp.sum(fab.wb_bytes))
+
+
+# -------------------------------------------------------------- service
+def serve_dual_at(fab: FabricState, mc, *, partition, ratio, bw,
+                  line_ready, line_bytes, line_gate,
+                  page_ready, page_bytes, page_gate
+                  ) -> Tuple[FabricState, jnp.ndarray, jnp.ndarray]:
+    """One dual-granularity service step on module `mc`'s link.
+
+    Slices the module's channel clocks, delegates to
+    ``bandwidth.serve_dual`` (bit-identical arithmetic to the pre-fabric
+    inlined slice/scatter), scatters the clocks back, and accrues the
+    gated bytes on the module's ledgers.
+
+    Returns (fabric', line_done, page_done).
+    """
+    lb, pb, line_done, page_done = bandwidth.serve_dual(
+        fab.line_busy[mc], fab.page_busy[mc], partition=partition,
+        ratio=ratio, bw=bw,
+        line_ready=line_ready, line_bytes=line_bytes, line_gate=line_gate,
+        page_ready=page_ready, page_bytes=page_bytes, page_gate=page_gate)
+    fab = fab._replace(
+        line_busy=fab.line_busy.at[mc].set(lb),
+        page_busy=fab.page_busy.at[mc].set(pb),
+        line_bytes=fab.line_bytes.at[mc].add(
+            jnp.where(line_gate, line_bytes, 0.0)),
+        page_bytes=fab.page_bytes.at[mc].add(
+            jnp.where(page_gate, page_bytes, 0.0)),
+    )
+    return fab, line_done, page_done
+
+
+def serve_writeback_at(fab: FabricState, mc, t_ready, nbytes, bw, *, gate
+                       ) -> Tuple[FabricState, jnp.ndarray]:
+    """Serialize an eviction writeback on module `mc`'s reverse channel."""
+    busy, done = bandwidth.occupy_busy(fab.wb_busy[mc], t_ready, nbytes,
+                                       bw, gate=gate)
+    fab = fab._replace(
+        wb_busy=fab.wb_busy.at[mc].set(busy),
+        wb_bytes=fab.wb_bytes.at[mc].add(jnp.where(gate, nbytes, 0.0)),
+    )
+    return fab, done

@@ -5,6 +5,15 @@ sampling, optional DaeMon paged-KV movement accounting.
 the prompt, then token-by-token with the layer-stacked cache). This is the
 entry the `decode_*` dry-run cells lower; examples/serve_paged.py runs it
 on a reduced config and reports the DaemonKVStore byte ledger.
+
+`serve_batch_paged` is the disaggregated-KV variant: the same decode loop
+with the batched two-tier DaemonKVStore in it — B tenant sequences, each
+with its own local page pool and engine, contending for ONE movement
+fabric spanning M memory modules (`repro.core.daemon_store` /
+`repro.core.fabric`). Each decode step requests every sequence's hot KV
+pages (real token offsets, so sub-block keys dedup like the simulator's
+packed page<<6|off keys) and the ledger records the wire traffic the
+decode costs on a disaggregated KV tier.
 """
 from __future__ import annotations
 
@@ -15,6 +24,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core.daemon_store import (KVStoreConfig, init_kv_store_batch,
+                                     ledger as store_ledger,
+                                     step_fetch_batch)
 from repro.models.model import (ModelOptions, decode_step,
                                 init_decode_state)
 
@@ -24,6 +36,13 @@ class ServeConfig:
     max_new_tokens: int = 32
     temperature: float = 0.0          # 0 => greedy
     seed: int = 0
+
+
+@dataclass(frozen=True)
+class PagedServeConfig:
+    """Paged-KV movement accounting knobs for `serve_batch_paged`."""
+    window_pages: int = 4     # hot KV pages requested per sequence per step
+    pages_per_seq: int = 32   # remote-tier pages reserved per tenant
 
 
 def make_decode_fn(cfg: ArchConfig, opt: ModelOptions):
@@ -69,3 +88,83 @@ def serve_batch(params, cfg: ArchConfig, prompts, scfg: ServeConfig,
         tok, state = step(params, state, tok, jnp.int32(p + i), sub,
                           jnp.float32(scfg.temperature))
     return jnp.concatenate(out + gen, axis=1)
+
+
+def paged_request_window(positions, seq_ids, page_tokens: int,
+                         window: int, pages_per_seq: int):
+    """Per-sequence hot-page window at the given decode positions.
+
+    Returns (pages (B, W) int32, offsets (B, W) int32): the W most
+    recently written KV pages of each sequence, mapped into the tenant's
+    region of the shared remote pool (`seq * pages_per_seq + logical`),
+    with the request's real token offset within its page — the current
+    position's offset on the newest page, the page's last token on the
+    older (fully written) ones.
+    """
+    positions = jnp.asarray(positions, jnp.int32)
+    seq_ids = jnp.asarray(seq_ids, jnp.int32)
+    cur = jnp.minimum(positions // page_tokens, pages_per_seq - 1)  # (B,)
+    j = jnp.arange(window, dtype=jnp.int32)                # (W,)
+    logical = jnp.maximum(cur[:, None] - j[None, :], 0)
+    pages = seq_ids[:, None] * pages_per_seq + logical
+    offs = jnp.where(j[None, :] == 0,
+                     positions[:, None] % page_tokens,
+                     page_tokens - 1)
+    return pages.astype(jnp.int32), offs.astype(jnp.int32)
+
+
+def serve_batch_paged(params, cfg: ArchConfig, prompts, scfg: ServeConfig,
+                      store_cfg: KVStoreConfig,
+                      pcfg: PagedServeConfig = PagedServeConfig(),
+                      opt: ModelOptions = None):
+    """Batched decode with the DaeMon movement plane in the loop.
+
+    Runs the same prefill + decode schedule as `serve_batch`, and per
+    step drives the batched two-tier store with each sequence's hot-page
+    window: B tenants (own pool/page-table/engine) share one fabric whose
+    per-module channels their page migrations queue on. The decode
+    computes from its dense cache; the store is the movement plane of the
+    disaggregated KV tier, and its ledger is the cost report.
+
+    Returns (tokens (B, P + max_new_tokens), ledger dict).
+    """
+    opt = opt or ModelOptions(remat="none")
+    b, p = prompts.shape
+    max_len = p + scfg.max_new_tokens
+    state, _ = init_decode_state(cfg, b, max_len, opt)
+    step = make_decode_fn(cfg, opt)
+    key = jax.random.PRNGKey(scfg.seed)
+
+    kv = init_kv_store_batch(store_cfg, b)
+    n_remote = b * pcfg.pages_per_seq
+    rshape = (n_remote, store_cfg.page_tokens, store_cfg.kv_heads,
+              store_cfg.head_dim)
+    remote_k = jnp.zeros(rshape, jnp.bfloat16)
+    remote_v = jnp.zeros(rshape, jnp.bfloat16)
+    seq_ids = jnp.arange(b, dtype=jnp.int32)
+
+    @jax.jit
+    def kv_step(kv_state, pos):
+        need, offs = paged_request_window(
+            jnp.full((b,), pos, jnp.int32), seq_ids,
+            store_cfg.page_tokens, pcfg.window_pages, pcfg.pages_per_seq)
+        kv_state, _, _, _ = step_fetch_batch(kv_state, store_cfg,
+                                             remote_k, remote_v, need,
+                                             offs)
+        return kv_state
+
+    out = [prompts]
+    for i in range(p):
+        key, sub = jax.random.split(key)
+        nxt, state = step(params, state, prompts[:, i:i + 1], jnp.int32(i),
+                          sub, jnp.float32(scfg.temperature))
+        kv = kv_step(kv, jnp.int32(i))
+    tok = nxt
+    gen = []
+    for i in range(scfg.max_new_tokens):
+        gen.append(tok)
+        key, sub = jax.random.split(key)
+        tok, state = step(params, state, tok, jnp.int32(p + i), sub,
+                          jnp.float32(scfg.temperature))
+        kv = kv_step(kv, jnp.int32(p + i))
+    return jnp.concatenate(out + gen, axis=1), store_ledger(kv)

@@ -1,5 +1,5 @@
 from repro.sim.workloads import WORKLOADS, WorkloadParams
 from repro.sim.schemes import (SCHEMES, SchemeFlags, TraceableFlags,
                                as_traceable, stack_flags)
-from repro.sim.desim import (SimConfig, lattice_cache_size, simulate_grid,
-                             simulate_lattice)
+from repro.sim.desim import (SimConfig, lattice_cache_size, run_trace,
+                             simulate_grid, simulate_lattice)

@@ -3,10 +3,15 @@
 The paper evaluates with a heavily modified Sniper; the reproducible
 equivalent on a CPU-only box is a request-level DES replaying LLC-miss
 traces through: local memory (set-assoc, LRU/FIFO), the DaeMon engines
-(inflight buffers + selection unit from ``repro.core.engine``), partitioned
-virtual channels over the network and the remote-memory bus
-(``repro.core.bandwidth.serve_dual`` — the only place channel arithmetic
-lives), link compression, and an MLP-window core model.
+(inflight buffers + selection unit from ``repro.core.engine``), and the
+shared movement fabric (``repro.core.fabric``): per-module partitioned
+virtual channels over the network and the remote-memory bus — each
+service call delegating to ``repro.core.bandwidth.serve_dual``, the only
+place channel arithmetic lives — plus page->module placement
+(``fabric.place``, the only home of module routing), link compression,
+and an MLP-window core model. The serving KV store
+(``repro.core.daemon_store``) consumes the SAME fabric bank, so simulator
+and store cannot diverge on routing or channel arithmetic.
 
 Scheme flags are *traced data* (``repro.sim.schemes.TraceableFlags``), not
 static Python: every scheme switch in the per-request transition is a
@@ -28,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bandwidth
+from repro.core import bandwidth, fabric
 from repro.core.engine import (EngineState, gate_tree as _gate_tree,
                                init_engine_state, find, retire_arrivals,
                                schedule_line, schedule_page,
@@ -50,6 +55,11 @@ class SimConfig:
     fifo: bool = False            # FIFO instead of LRU (fig 16)
     num_mc: int = 1               # memory components (fig 17/22)
     mlp: int = MLP_W
+    placement: str = "interleave"  # page->module policy (fabric.PLACEMENTS)
+
+    def fabric_config(self) -> fabric.FabricConfig:
+        return fabric.FabricConfig(num_modules=self.num_mc,
+                                   placement=self.placement)
 
 
 class SimState(NamedTuple):
@@ -60,11 +70,8 @@ class SimState(NamedTuple):
     tbl_valid: jnp.ndarray       # (SETS, WAYS) f32 (page arrival time)
     tbl_dirty: jnp.ndarray       # (SETS, WAYS) bool
     eng: EngineState
-    ch_line: jnp.ndarray         # (M,) net line-channel busy-until
-    ch_page: jnp.ndarray         # (M,) net page/shared-channel busy-until
-    mem_line: jnp.ndarray        # (M,) remote-memory bus channels
-    mem_page: jnp.ndarray        # (M,)
-    ch_rev: jnp.ndarray          # (M,) writeback channel (accounting)
+    net: fabric.FabricState      # network-link channel bank (M modules)
+    mem: fabric.FabricState      # remote-memory bus channel bank
     stats: dict
 
 
@@ -76,8 +83,7 @@ STAT_KEYS = ("i", "n", "hits", "lat_sum", "pages_moved", "lines_moved",
 def _init_state(cfg: SimConfig, n_pages: int) -> SimState:
     cap = max(WAYS, int(n_pages * cfg.local_frac))
     sets = max(1, cap // WAYS)
-    m = cfg.num_mc
-    z = lambda: jnp.zeros((m,), F32)
+    fcfg = cfg.fabric_config()
     return SimState(
         t=jnp.zeros((), F32),
         ring=jnp.zeros((cfg.mlp,), F32),
@@ -86,7 +92,8 @@ def _init_state(cfg: SimConfig, n_pages: int) -> SimState:
         tbl_valid=jnp.full((sets, WAYS), BIG, F32),
         tbl_dirty=jnp.zeros((sets, WAYS), bool),
         eng=init_engine_state(cfg.daemon),
-        ch_line=z(), ch_page=z(), mem_line=z(), mem_page=z(), ch_rev=z(),
+        net=fabric.init_fabric(fcfg),
+        mem=fabric.init_fabric(fcfg),
         stats={k: jnp.zeros((), F32) for k in STAT_KEYS},
     )
 
@@ -100,7 +107,7 @@ def make_step(flags, cfg: SimConfig):
     comp_lat = dp.compress_latency_ns
     line_b = float(dp.line_bytes)
     page_b = float(dp.page_bytes)
-    m = cfg.num_mc
+    fcfg = cfg.fabric_config()
 
     def step(st: SimState, inp):
         page, off, gap, wr, net, comp_ratio = inp
@@ -139,7 +146,7 @@ def make_step(flags, cfg: SimConfig):
         line_only = ~fl.move_pages & ~fl.page_free   # line-only: always fetch
         send_line = jnp.where(line_only, ~is_hit, send_line) & ~fl.local_only
 
-        mc = page % m
+        mc = fabric.place(fcfg, page)
         bw = net["bw"][mc] * net["bw_mult"]
         sw = net["switch"][mc]
         membw = net["membw"]
@@ -150,15 +157,14 @@ def make_step(flags, cfg: SimConfig):
         move_page_physically = send_page & ~fl.page_free
 
         # ---- remote-memory bus then network link: each a dual-granularity
-        # channel pair (partitioned virtual channels or one shared FIFO) ----
-        lm_busy, pm_busy, lm_done, pm_done = bandwidth.serve_dual(
-            st.mem_line[mc], st.mem_page[mc], partition=fl.partition,
-            ratio=ratio, bw=membw,
+        # channel bank on the shared fabric (partitioned virtual channels
+        # or one shared FIFO per module) ----
+        mem_fab, lm_done, pm_done = fabric.serve_dual_at(
+            st.mem, mc, partition=fl.partition, ratio=ratio, bw=membw,
             line_ready=t0, line_bytes=line_b, line_gate=send_line,
             page_ready=t0, page_bytes=page_b, page_gate=move_page_physically)
-        ln_busy, pn_busy, ln_done, pn_done = bandwidth.serve_dual(
-            st.ch_line[mc], st.ch_page[mc], partition=fl.partition,
-            ratio=ratio, bw=bw,
+        net_fab, ln_done, pn_done = fabric.serve_dual_at(
+            st.net, mc, partition=fl.partition, ratio=ratio, bw=bw,
             line_ready=lm_done, line_bytes=line_b, line_gate=send_line,
             page_ready=pm_done + comp_delay, page_bytes=wire_b,
             page_gate=move_page_physically)
@@ -196,8 +202,8 @@ def make_step(flags, cfg: SimConfig):
         evict_dirty = st.tbl_dirty[set_idx, victim] & (evict_page >= 0)
         wb = do_insert & evict_dirty
         wb_bytes = jnp.where(wb, wire_b, 0.0)
-        rev_busy, _ = bandwidth.occupy_busy(st.ch_rev[mc], t_issue, wire_b,
-                                            bw, gate=wb)
+        net_fab, _ = fabric.serve_writeback_at(net_fab, mc, t_issue,
+                                               wire_b, bw, gate=wb)
 
         def upd(tbl, val, gate, w):
             return tbl.at[set_idx, w].set(
@@ -248,16 +254,33 @@ def make_step(flags, cfg: SimConfig):
             ring=st.ring.at[slot].set(done),
             tbl_page=tbl_page, tbl_age=tbl_age, tbl_valid=tbl_valid,
             tbl_dirty=tbl_dirty, eng=eng,
-            ch_line=st.ch_line.at[mc].set(ln_busy),
-            ch_page=st.ch_page.at[mc].set(pn_busy),
-            mem_line=st.mem_line.at[mc].set(lm_busy),
-            mem_page=st.mem_page.at[mc].set(pm_busy),
-            ch_rev=st.ch_rev.at[mc].set(rev_busy),
+            net=net_fab, mem=mem_fab,
             stats=stats,
         )
         return new_st, done
 
     return step
+
+
+def _net_xs(net, r, warm_after, bw_mult) -> dict:
+    """Per-request broadcast of a net dict (+ warmup boundary) — the
+    scan-xs layout every trace replay (lattice point or `run_trace`)
+    feeds `make_step`."""
+    bw = jnp.asarray(net["bw"], F32)
+    sw = jnp.asarray(net["switch"], F32)
+    return {"bw": jnp.broadcast_to(bw, (r,) + bw.shape),
+            "switch": jnp.broadcast_to(sw, (r,) + sw.shape),
+            "membw": jnp.broadcast_to(jnp.asarray(net["membw"], F32),
+                                      (r,)),
+            "local_lat": jnp.broadcast_to(
+                jnp.asarray(net["local_lat"], F32), (r,)),
+            "remote_lat": jnp.broadcast_to(
+                jnp.asarray(net["remote_lat"], F32), (r,)),
+            "trans_lat": jnp.broadcast_to(
+                jnp.asarray(net["trans_lat"], F32), (r,)),
+            "warm_after": jnp.broadcast_to(
+                jnp.asarray(warm_after, F32), (r,)),
+            "bw_mult": bw_mult}
 
 
 def _simulate_point(cfg, n_pages, flags, warm_after, trace_arrays, net,
@@ -267,17 +290,7 @@ def _simulate_point(cfg, n_pages, flags, warm_after, trace_arrays, net,
     step = make_step(flags, cfg)
     page, off, gap, wr, bw_mult = trace_arrays
     r = page.shape[0]
-    xs = (page, off, gap, wr,
-          {"bw": jnp.broadcast_to(net["bw"], (r,) + net["bw"].shape),
-           "switch": jnp.broadcast_to(net["switch"],
-                                      (r,) + net["switch"].shape),
-           "membw": jnp.broadcast_to(net["membw"], (r,)),
-           "local_lat": jnp.broadcast_to(net["local_lat"], (r,)),
-           "remote_lat": jnp.broadcast_to(net["remote_lat"], (r,)),
-           "trans_lat": jnp.broadcast_to(net["trans_lat"], (r,)),
-           "warm_after": jnp.broadcast_to(
-               jnp.asarray(warm_after, F32), (r,)),
-           "bw_mult": bw_mult},
+    xs = (page, off, gap, wr, _net_xs(net, r, warm_after, bw_mult),
           jnp.broadcast_to(jnp.asarray(comp_ratio, F32), (r,)))
     final, _ = jax.lax.scan(step, st, xs)
     total_time = jnp.maximum(jnp.max(final.ring), final.t)
@@ -341,6 +354,23 @@ def simulate_lattice(schemes, cfg: SimConfig, trace: Trace, nets,
                        jnp.asarray(warm_frac * r, F32), arrays, stacked, cr)
     return [[{k: float(v[i, j]) for k, v in res.items()}
              for j in range(len(nets))] for i in range(len(schemes))]
+
+
+def run_trace(scheme_flags, cfg: SimConfig, trace: Trace, net,
+              comp_ratio, warm_frac: float = 0.3) -> SimState:
+    """Replay one trace under one scheme/net and return the final
+    SimState — the state-level sibling of `simulate_grid`, for callers
+    that need the movement internals (fabric channel banks, per-module
+    byte ledgers, engine buffers) rather than the metrics dict."""
+    st = _init_state(cfg, trace.n_pages)
+    step = make_step(scheme_flags, cfg)
+    r = len(trace.page)
+    xs = (jnp.asarray(trace.page), jnp.asarray(trace.off),
+          jnp.asarray(trace.gap), jnp.asarray(trace.wr),
+          _net_xs(net, r, warm_frac * r, jnp.ones((r,), F32)),
+          jnp.broadcast_to(jnp.asarray(comp_ratio, F32), (r,)))
+    final, _ = jax.lax.scan(step, st, xs)
+    return final
 
 
 def simulate_grid(scheme_flags, cfg: SimConfig, trace: Trace,

@@ -1,7 +1,10 @@
 """The unified movement plane: traceable-flags lattice equivalence against
 the seed per-scheme implementation (golden capture), single-compile
 behavior of `simulate_lattice`, and desim/daemon_store agreement on
-inflight-buffer occupancy through the shared engine primitives."""
+routing + channel arithmetic through the shared fabric: store page
+arrivals are pinned to raw `bandwidth.serve_dual` predictions under
+congestion, and per-module fabric wire bytes must sum to each caller's
+total ledger."""
 import json
 from pathlib import Path
 
@@ -9,15 +12,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hyp import given, settings, st as hyp_st  # optional-hypothesis shim
 
-from repro.core.daemon_store import (KVStoreConfig, init_kv_store,
-                                     page_cost_steps, step_fetch)
+from repro.core import bandwidth, fabric
+from repro.core.daemon_store import (KVStoreConfig, _wire_bytes,
+                                     init_kv_store, init_kv_store_batch,
+                                     ledger, link_bytes_per_step,
+                                     page_cost_steps, step_fetch,
+                                     step_fetch_batch)
 from repro.core.engine import (init_engine_state, retire_arrivals,
                                schedule_line, schedule_page,
                                select_granularity)
+from repro.core.fabric import FabricConfig
 from repro.core.params import NetworkParams
 from repro.sim.desim import (SimConfig, lattice_cache_size, make_net,
-                             simulate_grid, simulate_lattice)
+                             run_trace, simulate_grid, simulate_lattice)
 from repro.sim.schemes import SCHEMES, as_traceable, stack_flags, with_ratio
 from repro.sim.trace import generate_trace
 from repro.sim.workloads import WORKLOADS
@@ -99,47 +108,114 @@ def test_traceable_flags_pytree():
     assert as_traceable(tf) is tf
 
 
-# ------------------------------------- store and desim share one engine
-@pytest.mark.parametrize("seed", (0, 1, 2))
-def test_store_and_engine_agree_on_inflight_occupancy(seed):
-    """daemon_store's movement plane IS core.engine: replaying the store's
-    miss decisions through the bare engine primitives (the same calls the
-    simulator's make_step issues) reproduces the store's inflight page and
-    sub-block buffers exactly, every step."""
-    cfg = KVStoreConfig(num_local_pages=4, page_tokens=8, kv_heads=2,
-                        head_dim=16, page_budget_per_step=2)
-    rng = np.random.default_rng(seed)
-    steps, width, n_remote = 25, 3, 24
-    pages = rng.integers(0, n_remote, size=(steps, width)).astype(np.int32)
-    remote_k = jnp.zeros((n_remote, 8, 2, 16), jnp.float32)
-    remote_v = jnp.zeros_like(remote_k)
+# ----------------------- store == engine + serve_dual (via the fabric)
+def _replay_store_reference(cfg: KVStoreConfig, pages, offs):
+    """Independent movement replay: drive the REAL store, and in parallel
+    re-derive every decision from bare engine primitives plus raw
+    `bandwidth.serve_dual` calls on hand-rolled per-module scalar clocks
+    (no fabric, no store) — then pin the store's inflight buffers AND its
+    page-arrival times to the predictions, every step.
 
+    This is the congestion property: when several migrations target one
+    module's page channel, busy-until queueing must delay the store's
+    landings exactly as `serve_dual` says.
+    """
+    steps, width = pages.shape
+    n_remote = int(pages.max()) + 1
+    remote = jnp.zeros((n_remote, cfg.page_tokens, cfg.kv_heads,
+                        cfg.head_dim), jnp.float32)
     state = init_kv_store(cfg)
+    fetch = jax.jit(lambda s, need, off: step_fetch(s, cfg, remote, remote,
+                                                    need, off))
+
     eng_ref = init_engine_state(cfg.daemon)
-    cost = float(page_cost_steps(cfg))
+    m = cfg.fabric.num_modules
+    line_busy = [jnp.float32(0.0)] * m
+    page_busy = [jnp.float32(0.0)] * m
+    dp = cfg.daemon
+    bw = link_bytes_per_step(cfg)
+    nominal = float(page_cost_steps(cfg))
+    line_wire = _wire_bytes(cfg, 1, False)
+    page_wire = _wire_bytes(cfg, cfg.page_tokens, cfg.compress_pages)
+    _, page_share = bandwidth.shares(True, dp.bw_ratio)
     gate = lambda g, old, new: jax.tree.map(
         lambda a, b: jnp.where(g, b, a), old, new)
+
     for t in range(steps):
-        need = jnp.asarray(pages[t])
-        state, _, _, hit = step_fetch(state, cfg, remote_k, remote_v, need)
+        state, _, _, hit = fetch(state, jnp.asarray(pages[t]),
+                                 jnp.asarray(offs[t]))
         clock = jnp.float32(t + 1)
         eng_ref = retire_arrivals(eng_ref, clock)
         for i in range(width):
             pid = jnp.int32(pages[t, i])
+            mc = int(fabric.place(cfg.fabric, pid))
+            backlog = jnp.maximum(page_busy[mc] - clock, 0.0)
+            pressure = backlog / (backlog + nominal)
             send_line, send_page = select_granularity(
-                eng_ref, pid, clock, selection_enabled=True,
-                always_both=False)
+                eng_ref, pid, clock, selection_enabled=cfg.selection,
+                always_both=not cfg.selection, module_pressure=pressure)
             miss = ~hit[i]
-            eng_ref = gate(miss & send_page, eng_ref,
-                           schedule_page(eng_ref, pid, clock, clock + cost))
-            eng_ref = gate(miss & send_line, eng_ref,
-                           schedule_line(eng_ref, pid, i % 64, clock))
+            do_page = miss & send_page
+            do_line = miss & send_line
+            lb, pb, line_done, page_done = bandwidth.serve_dual(
+                line_busy[mc], page_busy[mc], partition=True,
+                ratio=dp.bw_ratio, bw=bw,
+                line_ready=clock, line_bytes=line_wire, line_gate=do_line,
+                page_ready=clock, page_bytes=page_wire, page_gate=do_page)
+            line_busy[mc], page_busy[mc] = lb, pb
+            start = page_done - page_wire / jnp.maximum(
+                bw * page_share, 1e-6)
+            eng_ref = gate(do_page, eng_ref,
+                           schedule_page(eng_ref, pid, start, page_done))
+            eng_ref = gate(do_line, eng_ref,
+                           schedule_line(eng_ref, pid,
+                                         jnp.int32(offs[t, i]) % 64,
+                                         line_done))
         np.testing.assert_array_equal(np.asarray(state.eng.page_key),
                                       np.asarray(eng_ref.page_key))
         np.testing.assert_array_equal(np.asarray(state.eng.sb_key),
                                       np.asarray(eng_ref.sb_key))
-        np.testing.assert_array_equal(np.asarray(state.eng.page_arrival),
-                                      np.asarray(eng_ref.page_arrival))
+        np.testing.assert_allclose(np.asarray(state.eng.page_arrival),
+                                   np.asarray(eng_ref.page_arrival),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(state.eng.page_issue),
+                                   np.asarray(eng_ref.page_issue),
+                                   rtol=1e-6)
+    # the store's channel clocks are the replay's clocks
+    np.testing.assert_allclose(np.asarray(state.fab.page_busy),
+                               np.asarray(jnp.stack(page_busy)), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(state.fab.line_busy),
+                               np.asarray(jnp.stack(line_busy)), rtol=1e-6)
+
+
+@pytest.mark.parametrize("seed,modules", ((0, 1), (1, 2), (2, 4)))
+def test_store_arrivals_match_serve_dual_under_congestion(seed, modules):
+    """page_budget_per_step=1 makes every page a multi-step service, so
+    same-module migrations queue — arrivals must still equal the raw
+    serve_dual predictions (DESIGN.md §5 unification invariant)."""
+    cfg = KVStoreConfig(num_local_pages=4, page_tokens=8, kv_heads=2,
+                        head_dim=16, page_budget_per_step=1,
+                        fabric=FabricConfig(num_modules=modules))
+    rng = np.random.default_rng(seed)
+    pages = rng.integers(0, 24, size=(20, 3)).astype(np.int32)
+    offs = rng.integers(0, 64, size=(20, 3)).astype(np.int32)
+    _replay_store_reference(cfg, pages, offs)
+
+
+@settings(max_examples=5, deadline=None)
+@given(hyp_st.integers(0, 2**31 - 1), hyp_st.integers(1, 3),
+       hyp_st.booleans())
+def test_store_arrivals_property(seed, budget, compress):
+    """Hypothesis sweep of the same invariant across budgets/compression
+    (service times change; the serve_dual equality must not)."""
+    cfg = KVStoreConfig(num_local_pages=4, page_tokens=8, kv_heads=2,
+                        head_dim=16, page_budget_per_step=budget,
+                        compress_pages=compress,
+                        fabric=FabricConfig(num_modules=2))
+    rng = np.random.default_rng(seed)
+    pages = rng.integers(0, 16, size=(8, 3)).astype(np.int32)
+    offs = rng.integers(0, 64, size=(8, 3)).astype(np.int32)
+    _replay_store_reference(cfg, pages, offs)
 
 
 def test_store_inflight_pages_dedup_and_land():
@@ -148,12 +224,161 @@ def test_store_inflight_pages_dedup_and_land():
     state = init_kv_store(cfg)
     remote = jnp.zeros((8, 8, 2, 16), jnp.float32)
     need = jnp.asarray([5, 5, 6], jnp.int32)
-    state, _, _, hit = step_fetch(state, cfg, remote, remote, need)
+    offs = jnp.asarray([3, 3, 1], jnp.int32)
+    state, _, _, hit = step_fetch(state, cfg, remote, remote, need, offs)
     live = np.asarray(state.eng.page_key)
     live = live[live >= 0]
     assert sorted(live.tolist()) == [5, 6]       # same-step dup deduped
+    # sub-block keys carry the requests' REAL token offsets (page<<6|off)
+    sb = np.asarray(state.eng.sb_key)
+    assert 5 * 64 + 3 in sb.tolist() and 6 * 64 + 1 in sb.tolist()
     assert not bool(hit.any())
     for _ in range(page_cost_steps(cfg) + 1):
-        state, _, _, hit = step_fetch(state, cfg, remote, remote, need)
+        state, _, _, hit = step_fetch(state, cfg, remote, remote, need,
+                                      offs)
     assert bool(hit.all())                       # pages landed locally
     assert float(state.stats["page_moves"]) == 2.0
+
+
+# --------------------------------- per-module wire-byte conservation
+def test_desim_fabric_bytes_conserve_ledger():
+    """Sum of the network fabric's per-module wire bytes == the stats
+    ledger's net_bytes, for every placement policy at M=4 (and M=1)."""
+    tr = generate_trace(WORKLOADS["pr"], 1500, seed=7)
+    net = make_net(NetworkParams(), num_mc=4,
+                   bw_factors=[4.0, 8.0, 4.0, 8.0],
+                   switches=[100.0] * 4)
+    for placement in fabric.PLACEMENTS:
+        cfg = SimConfig(num_mc=4, placement=placement)
+        final = run_trace(SCHEMES["daemon"], cfg, tr, net,
+                          WORKLOADS["pr"].comp_ratio)
+        total = float(fabric.total_bytes(final.net))
+        np.testing.assert_allclose(total, float(final.stats["net_bytes"]),
+                                   rtol=1e-5)
+        # multi-module spread: more than one module actually served bytes
+        per_mod = np.asarray(final.net.line_bytes + final.net.page_bytes
+                             + final.net.wb_bytes)
+        assert int((per_mod > 0).sum()) > 1
+    final1 = run_trace(SCHEMES["daemon"], SimConfig(num_mc=1), tr,
+                       make_net(NetworkParams()),
+                       WORKLOADS["pr"].comp_ratio)
+    np.testing.assert_allclose(float(fabric.total_bytes(final1.net)),
+                               float(final1.stats["net_bytes"]), rtol=1e-5)
+
+
+def test_store_fabric_bytes_conserve_ledger():
+    """Batched multi-tenant store: per-module fabric bytes sum to the
+    per-sequence wire-byte ledgers' total."""
+    cfg = KVStoreConfig(num_local_pages=4, page_tokens=8, kv_heads=2,
+                        head_dim=16, page_budget_per_step=2,
+                        fabric=FabricConfig(num_modules=4))
+    state = init_kv_store_batch(cfg, 4)
+    remote = jnp.zeros((32, 8, 2, 16), jnp.float32)
+    rng = np.random.default_rng(11)
+    fetch = jax.jit(lambda s, need, off: step_fetch_batch(
+        s, cfg, remote, remote, need, off))
+    for t in range(15):
+        need = jnp.asarray(rng.integers(0, 32, size=(4, 3)), jnp.int32)
+        offs = jnp.asarray(rng.integers(0, 64, size=(4, 3)), jnp.int32)
+        state, _, _, _ = fetch(state, need, offs)
+    led = ledger(state)
+    assert led["wire_bytes"] > 0
+    np.testing.assert_allclose(sum(led["module_bytes"]),
+                               led["wire_bytes"], rtol=1e-5)
+    np.testing.assert_allclose(float(fabric.total_bytes(state.fab)),
+                               led["wire_bytes"], rtol=1e-5)
+
+
+# ------------------------------------------- batched multi-tenant store
+def test_batched_store_tenants_contend_on_shared_channels():
+    """B=4 tenants missing simultaneously: with M=1 every migration
+    queues on one page channel; with M=4 interleave they spread. Same
+    bytes, different congestion — and each tenant keeps its own pool."""
+    def run(modules):
+        cfg = KVStoreConfig(num_local_pages=4, page_tokens=8, kv_heads=2,
+                            head_dim=16, page_budget_per_step=1,
+                            fabric=FabricConfig(num_modules=modules))
+        state = init_kv_store_batch(cfg, 4)
+        remote = jnp.zeros((32, 8, 2, 16), jnp.float32)
+        # tenant b requests pages {b*8, b*8+1, b*8+2}: all distinct
+        need = jnp.asarray([[b * 8 + i for i in range(3)]
+                            for b in range(4)], jnp.int32)
+        state, _, _, hit = step_fetch_batch(state, cfg, remote, remote,
+                                            need)
+        return state, hit
+
+    s1, hit1 = run(1)
+    s4, hit4 = run(4)
+    assert not bool(hit1.any()) and not bool(hit4.any())
+    np.testing.assert_allclose(float(fabric.total_bytes(s1.fab)),
+                               float(fabric.total_bytes(s4.fab)))
+    # 12 pages on one channel back up far beyond 12 pages on four
+    assert float(s1.fab.page_busy.max()) > float(s4.fab.page_busy.max())
+    # per-tenant engines are independent: each holds only its own pages
+    for b in range(4):
+        live = np.asarray(s4.seqs.eng.page_key[b])
+        live = live[live >= 0]
+        assert set(live.tolist()) <= {b * 8, b * 8 + 1, b * 8 + 2}
+
+
+def test_batched_store_single_compile():
+    """One jit trace serves every step of a batched multi-module decode
+    (the store-side single-compile property)."""
+    cfg = KVStoreConfig(num_local_pages=4, page_tokens=8, kv_heads=2,
+                        head_dim=16,
+                        fabric=FabricConfig(num_modules=4))
+    remote = jnp.zeros((32, 8, 2, 16), jnp.float32)
+    fetch = jax.jit(lambda s, need: step_fetch_batch(s, cfg, remote,
+                                                     remote, need))
+    state = init_kv_store_batch(cfg, 4)
+    rng = np.random.default_rng(0)
+    for t in range(6):
+        need = jnp.asarray(rng.integers(0, 32, size=(4, 2)), jnp.int32)
+        state, _, _, _ = fetch(state, need)
+    assert fetch._cache_size() == 1
+
+
+# ------------------------------------------------- placement + pressure
+def test_placement_policies_route_in_range_and_deterministically():
+    pages = jnp.arange(256, dtype=jnp.int32)
+    for placement in fabric.PLACEMENTS:
+        fcfg = FabricConfig(num_modules=4, placement=placement)
+        mc = np.asarray(fabric.place(fcfg, pages))
+        assert mc.min() >= 0 and mc.max() < 4
+        np.testing.assert_array_equal(
+            mc, np.asarray(fabric.place(fcfg, pages)))
+        assert len(set(mc.tolist())) == 4      # all modules used
+    inter = FabricConfig(num_modules=4, placement="interleave")
+    np.testing.assert_array_equal(np.asarray(fabric.place(inter, pages)),
+                                  np.arange(256) % 4)
+    aff = FabricConfig(num_modules=4, placement="affinity",
+                       affinity_block=8)
+    mc = np.asarray(fabric.place(aff, pages))
+    for blk in range(256 // 8):
+        assert len(set(mc[blk * 8:(blk + 1) * 8].tolist())) == 1
+    with pytest.raises(ValueError):
+        FabricConfig(num_modules=2, placement="nope")
+
+
+def test_selection_pressure_biases_inflight_race_to_lines():
+    """A queued (un-issued) inflight page whose module is congested gets
+    its line raced even when the sub-block buffer is the fuller one."""
+    from repro.core.params import DaemonParams
+    dp = DaemonParams()
+    st = init_engine_state(dp)
+    # page 7 inflight, issue far in the future (still queued)
+    st = schedule_page(st, jnp.int32(7), jnp.float32(1e6),
+                       jnp.float32(2e6))
+    # sb buffer more utilized than the page buffer
+    for i in range(4):
+        st = schedule_line(st, jnp.int32(100 + i), jnp.int32(0),
+                           jnp.float32(1e6))
+    line0, _ = select_granularity(st, jnp.int32(7), 0.0,
+                                  selection_enabled=True,
+                                  always_both=False)
+    assert not bool(line0)                 # pressure-free rule: no race
+    line1, _ = select_granularity(st, jnp.int32(7), 0.0,
+                                  selection_enabled=True,
+                                  always_both=False,
+                                  module_pressure=0.5)
+    assert bool(line1)                     # congested module: race it
