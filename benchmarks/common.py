@@ -1,12 +1,19 @@
-"""Shared benchmark infrastructure: trace cache, scheme grids, aggregates."""
+"""Shared benchmark infrastructure: trace cache, scheme grids, aggregates,
+and the warm-gated batched-store run harness."""
 from __future__ import annotations
 
 import math
 import os
+import time
+from functools import partial
 from pathlib import Path
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core.daemon_store import (init_kv_store_batch, ledger,
+                                     step_fetch_batch)
 from repro.core.params import NetworkParams
 from repro.sim.desim import SimConfig, make_net, simulate_lattice
 from repro.sim.schemes import SCHEMES, with_ratio
@@ -21,6 +28,76 @@ TRACE_R = int(os.environ.get("REPRO_BENCH_R", "60000"))
 
 # the paper's network grid: switch latency {100,400}ns x bw factor {2,4,8}
 NETWORK_GRID = [(sw, bf) for sw in (100.0, 400.0) for bf in (2.0, 4.0, 8.0)]
+
+# serving-side warmup boundary — the same 30% gating desim's warm_frac
+# applies to its latency/hit stats, so BENCH_serve.json and
+# BENCH_robust.json stay comparable across runs and trace lengths
+WARM_FRAC = 0.3
+
+# shared tenant geometry for the serving-side sweeps: BENCH_serve.json
+# (benchmarks/serving.py) and BENCH_robust.json (benchmarks/robustness.py)
+# must describe the same tenant setup to be comparable
+SERVE_BATCH = 4               # tenant sequences
+SERVE_PAGES_PER_TENANT = 64   # remote-pool region per tenant
+
+
+@partial(jax.jit, static_argnums=0)
+def _store_fetch(cfg, state, remote, need, off):
+    return step_fetch_batch(state, cfg, remote, remote, need, off)
+
+
+@jax.jit
+def _store_lag(state, clock):
+    busy = jnp.maximum(state.fab.line_busy, state.fab.page_busy)
+    return jnp.maximum(jnp.max(busy) - clock, 0.0)
+
+
+def run_store_warmed(cfg, pages, offs, n_remote, *, link=None,
+                     track_lag=False) -> dict:
+    """Drive a batched DaemonKVStore over (steps, B, W) request streams
+    with desim-style warmup gating — the ONE store-run harness both
+    `benchmarks/serving.py` and `benchmarks/robustness.py` report from
+    (a private copy in either would let their warmup/ledger-delta
+    semantics drift apart).
+
+    Warm phase (`WARM_FRAC`, incl. compile) runs untimed; the ledger is
+    snapshotted at the boundary so callers can delta-gate hit/request
+    stats. With `track_lag`, each timed step also records how far the
+    busiest channel's committed service extends past the decode clock
+    (the movement-plane lag the robustness sweep integrates) — the lag
+    accumulates as a device scalar, so the timed loop stays async (no
+    per-step host sync skewing wall_s).
+
+    The jitted step is a module-level function with `cfg` static, so
+    sweeps over link profiles / request streams reuse one compile per
+    store config. Returns {state, steps, warm, led_warm, led,
+    stall_warm, wall_s, lag_sum}.
+    """
+    steps, batch = pages.shape[0], pages.shape[1]
+    warm = max(1, int(steps * WARM_FRAC))
+    remote = jnp.zeros((n_remote, cfg.page_tokens, cfg.kv_heads,
+                        cfg.head_dim), jnp.bfloat16)
+    state = init_kv_store_batch(cfg, batch, link=link)
+    for t in range(warm):
+        state, *_ = _store_fetch(cfg, state, remote,
+                                 jnp.asarray(pages[t]),
+                                 jnp.asarray(offs[t]))
+    jax.block_until_ready(state.fab.page_busy)
+    led_warm = ledger(state)
+    stall_warm = np.asarray(state.seqs.stats["stall_steps"])
+    t0 = time.time()
+    lag_acc = jnp.zeros((), jnp.float32)
+    for t in range(warm, steps):
+        state, *_ = _store_fetch(cfg, state, remote,
+                                 jnp.asarray(pages[t]),
+                                 jnp.asarray(offs[t]))
+        if track_lag:
+            lag_acc = lag_acc + _store_lag(state, jnp.float32(t + 1))
+    jax.block_until_ready(state.fab.page_busy)
+    return {"state": state, "steps": steps, "warm": warm,
+            "led_warm": led_warm, "led": ledger(state),
+            "stall_warm": stall_warm,
+            "wall_s": time.time() - t0, "lag_sum": float(lag_acc)}
 
 
 def get_trace(wl: str, r: int = None, seed: int = 1) -> Trace:

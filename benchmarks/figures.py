@@ -180,20 +180,28 @@ def fig12_compression(r=None):
 
 
 def fig13_disturbance(r=None):
-    """Time-varying background traffic: bw multiplier phases."""
+    """Time-varying background traffic: a contention schedule on the
+    fabric's LinkModel (heavy middle phase, partial recovery) — the
+    in-fabric replacement for the old per-request bw_mult threading."""
     r = r or TRACE_R
     rows = []
-    phases = np.ones(r, np.float32)
-    third = r // 3
-    phases[third:2 * third] = 0.4     # heavy contention in the middle
-    phases[2 * third:] = 0.7
     for wl in ("pr", "nw"):
         tr = get_trace(wl, r)
         w = WORKLOADS[wl]
-        nets = nets_for([(100.0, 4.0)])
+        # phase boundaries in simulated time: the compute-gap floor is a
+        # lower bound on the run's duration; queueing stretches the run,
+        # so the last segment (searchsorted-clip) covers the tail
+        horizon = float(np.sum(tr.gap))
+        sched = (np.asarray([0.0, horizon / 3, 2 * horizon / 3],
+                            np.float32),
+                 np.asarray([1.0, 0.4, 0.7], np.float32),
+                 np.ones((3,), np.float32))
+        nets = [make_net(NetworkParams(bw_factor=4.0,
+                                       switch_latency_ns=100.0),
+                         schedule=sched)]
         names = ("remote", "lc", "pq", "daemon")
         res = simulate_lattice([SCHEMES[s] for s in names], SimConfig(),
-                               tr, nets, w.comp_ratio, bw_mult=phases)
+                               tr, nets, w.comp_ratio)
         out = {s: res[i][0] for i, s in enumerate(names)}
         for s in ("lc", "pq", "daemon"):
             rows.append([wl, s, round(out["remote"]["total_time_ns"]

@@ -3,7 +3,9 @@
 Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig8,...]
 Emits CSV blocks per figure and the paper-claim validation summary, plus
 `BENCH_serve.json` (machine-readable batched-store serving metrics:
-tokens/s, wire bytes, hit ratio) when the `serve` sweep runs.
+tokens/s, wire bytes, hit ratio) when the `serve` sweep runs and
+`BENCH_robust.json` (adaptive-vs-static repartitioning under time-varying
+link profiles, sim + store planes) when the `robust` sweep runs.
 Trace length via REPRO_BENCH_R (default 60000).
 """
 from __future__ import annotations
@@ -15,11 +17,12 @@ from pathlib import Path
 
 import numpy as np
 
-from benchmarks import figures, roofline, serving
+from benchmarks import figures, robustness, roofline, serving
 from benchmarks.common import ORDER
 from benchmarks.validate import check
 
 BENCH_SERVE_JSON = Path("BENCH_serve.json")
+BENCH_ROBUST_JSON = Path("BENCH_robust.json")
 
 
 def main() -> None:
@@ -88,6 +91,13 @@ def main() -> None:
               f"{sv['tokens_per_s']:.0f} tok/s, "
               f"{sv['wire_bytes']/1e6:.2f}MB wire, "
               f"hit {sv['hit_ratio']:.3f}")
+    if want("robust"):
+        rb = robustness.robust_sweep(quick=args.quick)
+        BENCH_ROBUST_JSON.write_text(json.dumps(rb, indent=2) + "\n")
+        hl = rb["headline"]
+        print(f"# BENCH_robust.json written: adaptive-vs-best-static "
+              f"desim {hl['desim_best_win']:.3f}x, "
+              f"store {hl['store_best_win']:.3f}x")
     if want("roofline"):
         roofline.main()
 

@@ -12,20 +12,15 @@ Remote-style (uncompressed) — and emits the machine-readable
 """
 from __future__ import annotations
 
-import time
-
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_print
-from repro.core.daemon_store import (KVStoreConfig, init_kv_store_batch,
-                                     ledger, step_fetch_batch)
+from benchmarks.common import (SERVE_BATCH as BATCH,
+                               SERVE_PAGES_PER_TENANT as PAGES_PER_TENANT,
+                               csv_print, run_store_warmed)
+from repro.core.daemon_store import KVStoreConfig
 from repro.core.fabric import FabricConfig
 
-BATCH = 4                 # tenant sequences (acceptance: B >= 4)
 WIDTH = 4                 # page requests per tenant per decode step
-PAGES_PER_TENANT = 64     # remote-pool region per tenant
 
 SWEEP = (
     # (label, compress, modules, placement)
@@ -58,32 +53,27 @@ def _tenant_streams(steps: int, seed: int = 0):
 
 
 def _run_one(cfg: KVStoreConfig, pages, offs) -> dict:
-    steps = pages.shape[0]
-    n_remote = BATCH * PAGES_PER_TENANT
-    remote = jnp.zeros((n_remote, cfg.page_tokens, cfg.kv_heads,
-                        cfg.head_dim), jnp.bfloat16)
-    fetch = jax.jit(lambda s, need, off: step_fetch_batch(
-        s, cfg, remote, remote, need, off))
-    state = init_kv_store_batch(cfg, BATCH)
-    state, *_ = fetch(state, jnp.asarray(pages[0]),
-                      jnp.asarray(offs[0]))           # compile + warm
-    jax.block_until_ready(state.fab.page_busy)
-    t0 = time.time()
-    for t in range(1, steps):
-        state, *_ = fetch(state, jnp.asarray(pages[t]),
-                          jnp.asarray(offs[t]))
-    jax.block_until_ready(state.fab.page_busy)
-    wall = time.time() - t0
-    led = ledger(state)
-    decoded = BATCH * (steps - 1)
+    """One sweep point. Throughput and hit ratio are *warmup-gated*: the
+    first WARM_FRAC of the steps (cold pools, compile) are excluded from
+    tokens_per_s and hit_ratio — the same gating desim applies to its
+    latency/hit stats (`common.run_store_warmed`, shared with the
+    robustness sweep), so BENCH_serve.json is comparable across runs and
+    trace lengths. Byte/move totals still cover the whole run (they feed
+    the conservation checks)."""
+    run = run_store_warmed(cfg, pages, offs, BATCH * PAGES_PER_TENANT)
+    led, led_warm, warm = run["led"], run["led_warm"], run["warm"]
+    decoded = BATCH * (run["steps"] - warm)
+    hits = led["local_hits"] - led_warm["local_hits"]
+    reqs = led["requests"] - led_warm["requests"]
     return {
-        "tokens_per_s": decoded / max(wall, 1e-9),
+        "tokens_per_s": decoded / max(run["wall_s"], 1e-9),
         "wire_bytes": led["wire_bytes"],
         "uncompressed_bytes": led["uncompressed_bytes"],
-        "hit_ratio": led["local_hits"] / max(led["requests"], 1.0),
+        "hit_ratio": hits / max(reqs, 1.0),
         "page_moves": led["page_moves"],
         "sub_block_fetches": led["sub_block_fetches"],
         "module_bytes": led["module_bytes"],
+        "warm_steps": warm,
     }
 
 
@@ -113,6 +103,7 @@ def serve_sweep(quick: bool = False, steps: int = None) -> dict:
     remote4 = next(r for r in results if r["label"] == "remote-style")
     return {
         "batch": BATCH, "steps": steps, "quick": quick,
+        "warm_steps": daemon4["warm_steps"],
         "tokens_per_s": daemon4["tokens_per_s"],
         "wire_bytes": daemon4["wire_bytes"],
         "hit_ratio": daemon4["hit_ratio"],

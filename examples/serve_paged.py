@@ -28,8 +28,11 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.daemon_store import (KVStoreConfig, init_kv_store_batch,
-                                     ledger, step_fetch_batch)
-from repro.core.fabric import FabricConfig
+                                     ledger, link_bytes_per_step,
+                                     step_fetch_batch)
+from repro.core.fabric import FabricConfig, scheduled_link
+from repro.runtime.fault import LinkHealthMonitor
+from repro.sim.workloads import make_link_schedule
 from repro.models.model import ModelOptions, init_model
 from repro.runtime.serve_loop import (PagedServeConfig, ServeConfig,
                                       serve_batch_paged)
@@ -73,19 +76,31 @@ def main():
                                  jnp.int32)
     store_cfg = KVStoreConfig(
         num_local_pages=8, page_tokens=4, kv_heads=2, head_dim=32,
-        page_budget_per_step=4,
+        page_budget_per_step=4, adaptive_ratio=True,
         fabric=FabricConfig(num_modules=MODULES, placement="affinity",
                             affinity_block=8))
+    # time-varying link: module 0's health flaps to near-dead mid-decode
+    # (knot times are decode steps); the health monitor watches it and
+    # surfaces a reshard advisory in the ledger
+    n_steps = 6 + 10
+    link = scheduled_link(
+        link_bytes_per_step(store_cfg),
+        make_link_schedule("flap", float(n_steps), MODULES, knots=8),
+        MODULES)
     out, led = serve_batch_paged(params, cfg, prompts,
                                  ServeConfig(max_new_tokens=10), store_cfg,
                                  PagedServeConfig(window_pages=2,
-                                                  pages_per_seq=8))
+                                                  pages_per_seq=8),
+                                 link=link,
+                                 health_monitor=LinkHealthMonitor(
+                                     patience=2))
     for row in out:
         print("  gen:", row.tolist())
     hr = led["local_hits"] / max(led["requests"], 1)
     print(f"  decode movement: wire={led['wire_bytes']/1e3:.1f}KB "
           f"pages={led['page_moves']:.0f} "
-          f"sub_blocks={led['sub_block_fetches']:.0f} hit={hr:.2f}")
+          f"sub_blocks={led['sub_block_fetches']:.0f} hit={hr:.2f} "
+          f"reshard_advised={led['link_reshard_modules']}")
 
     print(f"\n== DaeMon KV movement ledger vs Remote-style "
           f"(B={BATCH} tenants x M={MODULES} modules) ==")

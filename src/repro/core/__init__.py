@@ -3,18 +3,25 @@
 # engine.py       functional DaeMon compute/memory engines (queues, inflight
 #                 CAM-equivalents, §4.2 selection unit, §4.3 dirty unit)
 # bandwidth.py    §4.1 approximate bandwidth partitioning (virtual channels)
+#                 + the adaptive repartitioning control law (adapt_ratio)
 # fabric.py       multi-module movement fabric: per-module channel banks,
+#                 time-varying LinkModel (bandwidth schedules + health),
 #                 page->module placement, per-module wire-byte ledgers
 # compression.py  §4.4 link compression, TPU-adapted (int8/int4 blocks, BDI)
 # daemon_store.py two-tier paged KV store for serving (sub-block critical
 #                 plane + compressed page plane + adaptive selection),
 #                 batched multi-tenant on the shared fabric
 # params.py       hardware constants from paper Table 1/2
-from repro.core.bandwidth import (Channel, PartitionedLink, init_channel,
-                                  init_link, occupy_busy, send_line,
-                                  send_page, serve_dual, shares, transmit)
+from repro.core.bandwidth import (RATIO_MAX, RATIO_MIN, Channel,
+                                  PartitionedLink, adapt_ratio,
+                                  init_channel, init_link, occupy_busy,
+                                  send_line, send_page, serve_dual,
+                                  shares, transmit)
 from repro.core.fabric import (PLACEMENTS, FabricConfig, FabricState,
-                               backlog, init_fabric, place, serve_dual_at,
+                               LinkModel, adapt_ratio_at, backlog,
+                               constant_link, init_fabric, link_bw_at,
+                               module_health, place, sample_link,
+                               scheduled_link, serve_dual_at,
                                serve_writeback_at, total_bytes)
 from repro.core.compression import (dequantize_block_int4,
                                     dequantize_block_int8, ef_compress,

@@ -16,6 +16,11 @@ This module is the ONLY place busy-until channel arithmetic lives:
                      with a *traceable* partitioned-vs-shared-FIFO switch
                      (the simulator's per-request transition and every
                      scheme in the lattice run through it);
+  * `adapt_ratio`  — the adaptive repartitioning control law: the §4.1
+                     line/page split as *carried state* nudged toward the
+                     observed demand split (channel backlogs + inflight
+                     buffer occupancies), clamped so neither channel can
+                     ever be starved;
   * `Channel`/`PartitionedLink` — the scalar NamedTuple API used by the
                      property tests and standalone analyses.
 
@@ -56,6 +61,55 @@ def shares(partition, ratio) -> Tuple[jnp.ndarray, jnp.ndarray]:
     line = jnp.where(partition, ratio, 1.0).astype(F32)
     page = jnp.where(partition, 1.0 - ratio, 1.0).astype(F32)
     return line, page
+
+
+# ------------------------------------------------ adaptive repartitioning
+# Hard clamp of the adaptive line share: the line channel always keeps at
+# least RATIO_MIN of the physical bandwidth and the page channel at least
+# 1 - RATIO_MAX, so the controller can never starve either granularity.
+RATIO_MIN = 0.05
+RATIO_MAX = 0.75
+
+
+def adapt_ratio(ratio, line_demand, page_demand, *, saturation, r_idle,
+                gain=0.25, r_min=RATIO_MIN, r_max=RATIO_MAX
+                ) -> jnp.ndarray:
+    """One adaptive-repartitioning control step (the §4.1 ratio as state).
+
+    Direction and magnitude are deliberately decoupled:
+
+      * `line_demand` / `page_demand` — the *offered* byte demand of each
+        granularity (EMAs of scheduled wire bytes, ``FabricState.
+        line_rate``/``page_rate``). They set the target's *direction*:
+        the byte-proportional, work-conserving split. Offered demand is
+        independent of the current split, so the controller cannot chase
+        backlogs it created itself (pricing feedback made a
+        backlog-directed law oscillate and diverge).
+      * `saturation` in [0, 1] — how congested the module's channels are
+        (queueing backlog vs a nominal page service time, see
+        ``fabric.adapt_ratio_at``). It sets the *magnitude*: saturated
+        modules move to the demand split (bulk backlogs drain instead of
+        idling behind a fixed reservation); idle modules drift back to
+        `r_idle`, the scheme's *seed* ratio (the paper's static §4.1
+        reservation) — with nothing to adapt to, the adaptive scheme IS
+        the static scheme.
+
+    The carried ratio moves first-order (`gain`) toward the blended
+    target. Everything is traceable (`where`, not Python branches), so
+    the static vs adaptive switch rides the scheme axis of a
+    single-compile lattice. The [r_min, r_max] clamp guarantees neither
+    channel is ever starved regardless of demand history.
+    """
+    ratio = jnp.asarray(ratio, F32)
+    line_demand = jnp.asarray(line_demand, F32)
+    page_demand = jnp.asarray(page_demand, F32)
+    r_idle = jnp.asarray(r_idle, F32)
+    total = line_demand + page_demand
+    byte_prop = jnp.where(total > 1e-6,
+                          line_demand / jnp.maximum(total, 1e-6), r_idle)
+    sat = jnp.clip(jnp.asarray(saturation, F32), 0.0, 1.0)
+    target = sat * byte_prop + (1.0 - sat) * r_idle
+    return jnp.clip(ratio + gain * (target - ratio), r_min, r_max)
 
 
 def serve_dual(line_busy, page_busy, *, partition, ratio, bw,

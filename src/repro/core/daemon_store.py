@@ -11,9 +11,13 @@ the engine:
      fetch, `kernels.paged_gather`) immediately,
   3. schedules *page plane* migrations through the shared movement fabric
      (`repro.core.fabric`): per-module bw_ratio-partitioned virtual
-     channels, int8-compressed payloads — §4.1/§4.4,
+     channels over a possibly *time-varying* `LinkModel` (per-module
+     bandwidth schedules + health masks, sampled at the decode-step
+     clock), int8-compressed payloads — §4.1/§4.4,
   4. adapts granularity to the inflight-buffer occupancies AND the target
-     module's channel backlog (§4.2 + fabric pressure).
+     module's channel backlog (§4.2 + fabric pressure), and — when
+     `adaptive_ratio` is set — adapts the §4.1 partition ratio itself
+     (the fabric's carried per-module ratio, `bandwidth.adapt_ratio`).
 
 Neither the inflight-buffer machinery nor the channel arithmetic is
 reimplemented here: the store embeds a ``repro.core.engine.EngineState``
@@ -52,15 +56,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bandwidth, fabric
-from repro.core.engine import (EngineState, gate_tree as _gate_tree,
+from repro.core.engine import (EngineState, find, gate_tree as _gate_tree,
                                init_engine_state, poll_arrivals,
                                retire_arrivals, schedule_line,
-                               schedule_page, select_granularity)
-from repro.core.fabric import FabricConfig, FabricState
+                               schedule_page, select_granularity,
+                               utilization)
+from repro.core.fabric import FabricConfig, FabricState, LinkModel
 from repro.core.params import DaemonParams
 from repro.kernels import ops
 
 F32 = jnp.float32
+BIG = jnp.float32(3.0e38)
 
 
 @dataclass(frozen=True)
@@ -73,6 +79,7 @@ class KVStoreConfig:
     compress_pages: bool = True   # int8 link compression on page moves
     page_budget_per_step: int = 4  # page-plane raw tokens drained per step
     selection: bool = True        # §4.2 adaptive granularity (else both)
+    adaptive_ratio: bool = False  # §4.1 ratio as adapted fabric state
     fabric: FabricConfig = FabricConfig()  # modules + placement
 
 
@@ -133,7 +140,7 @@ class BatchedKVStoreState(NamedTuple):
 
 
 STAT_KEYS = ("sub_block_fetches", "page_moves", "wire_bytes",
-             "uncompressed_bytes", "local_hits", "requests")
+             "uncompressed_bytes", "local_hits", "requests", "stall_steps")
 
 
 def _init_seq(cfg: KVStoreConfig) -> SeqState:
@@ -149,17 +156,35 @@ def _init_seq(cfg: KVStoreConfig) -> SeqState:
     )
 
 
-def init_kv_store(cfg: KVStoreConfig) -> KVStoreState:
-    return KVStoreState(seq=_init_seq(cfg),
-                        fab=fabric.init_fabric(cfg.fabric),
+def default_link(cfg: KVStoreConfig) -> LinkModel:
+    """Constant, fully healthy per-module link at the store's nominal
+    bandwidth (`link_bytes_per_step`) — the pre-LinkModel semantics."""
+    return fabric.constant_link(link_bytes_per_step(cfg),
+                                cfg.fabric.num_modules)
+
+
+def _init_fab(cfg: KVStoreConfig, link: LinkModel = None) -> FabricState:
+    return fabric.init_fabric(cfg.fabric,
+                              link=default_link(cfg) if link is None
+                              else link,
+                              ratio=cfg.daemon.bw_ratio)
+
+
+def init_kv_store(cfg: KVStoreConfig, link: LinkModel = None
+                  ) -> KVStoreState:
+    """`link` (optional) swaps the constant default for a time-varying
+    per-module `LinkModel` whose schedule is sampled at the decode-step
+    clock — the serving-side robustness axis (bursts, degradation, link
+    flaps). Knot times are in decode steps."""
+    return KVStoreState(seq=_init_seq(cfg), fab=_init_fab(cfg, link),
                         clock=jnp.zeros((), F32))
 
 
-def init_kv_store_batch(cfg: KVStoreConfig, batch: int
-                        ) -> BatchedKVStoreState:
+def init_kv_store_batch(cfg: KVStoreConfig, batch: int,
+                        link: LinkModel = None) -> BatchedKVStoreState:
     seq = _init_seq(cfg)
     seqs = jax.tree.map(lambda x: jnp.stack([x] * batch), seq)
-    return BatchedKVStoreState(seqs=seqs, fab=fabric.init_fabric(cfg.fabric),
+    return BatchedKVStoreState(seqs=seqs, fab=_init_fab(cfg, link),
                                clock=jnp.zeros((), F32))
 
 
@@ -244,7 +269,8 @@ def _land(seq: SeqState, cfg: KVStoreConfig, remote_k, remote_v, clock
         )
 
     seq = jax.lax.cond(jnp.any(landed), do_land, lambda s: s, seq)
-    return seq._replace(eng=retire_arrivals(seq.eng, clock))
+    return seq._replace(eng=retire_arrivals(seq.eng, clock,
+                                            cfg.daemon.lines_per_page))
 
 
 # ------------------------------------------------------------- lookup
@@ -288,33 +314,53 @@ def _schedule(seq: SeqState, fab: FabricState, cfg: KVStoreConfig,
     its transfers on the shared fabric (sequential within the step, so
     same-page requests dedup and queue exactly like the simulator).
 
-    Arrival times are the fabric's `serve_dual` completions; the page's
-    issue time is its transmission *start* (desim's `pn_start`), so a
-    page queued behind a congested module can still be raced by lines.
+    Arrival times are the fabric's `serve_dual` completions at the link
+    bandwidth sampled at this decode step (time-varying under a scheduled
+    `LinkModel`); the page's issue time is its transmission *start*
+    (desim's `pn_start`), so a page queued behind a congested module can
+    still be raced by lines. When `cfg.adaptive_ratio` is set, each
+    request first nudges the target module's carried partition ratio
+    toward the observed backlog/occupancy demand (`fabric.
+    adapt_ratio_at`) — the serving side of the §4.1 repartitioning
+    controller.
+
+    The `stall_steps` stat accrues, per decode step, the *mean*
+    per-request movement-plane delay (earliest of sub-block completion /
+    inflight page arrival / own page completion, minus the clock; hit
+    requests contribute zero) — the aggregate-latency metric
+    `benchmarks/robustness.py` reports alongside the wire-lag makespan.
     """
     r = needed_pages.shape[0]
     dp = cfg.daemon
-    bw = link_bytes_per_step(cfg)
     nominal = float(page_cost_steps(cfg))
     line_wire = _wire_bytes(cfg, 1, False)            # critical token, raw
     page_wire = _wire_bytes(cfg, cfg.page_tokens, cfg.compress_pages)
-    _, page_share = bandwidth.shares(True, dp.bw_ratio)
 
     def sched_one(carry, i):
         eng, fab = carry
         pid = needed_pages[i]
-        off = needed_offsets[i] % 64
+        off = needed_offsets[i] % dp.lines_per_page
         mc = fabric.place(cfg.fabric, pid)
+        bw = fabric.link_bw_at(fab.link, mc, clock)
         _, page_backlog = fabric.backlog(fab, mc, clock)
         pressure = page_backlog / (page_backlog + nominal)
         send_line, send_page = select_granularity(
             eng, pid, clock, selection_enabled=cfg.selection,
             always_both=not cfg.selection, module_pressure=pressure)
+        fab = fabric.adapt_ratio_at(
+            fab, mc, clock, adaptive=cfg.adaptive_ratio,
+            r_idle=dp.bw_ratio, page_unit=page_wire,
+            line_occ=utilization(eng.sb_key),
+            page_occ=utilization(eng.page_key))
+        _, page_share = bandwidth.shares(True, fab.ratio[mc])
         miss = ~local_hit[i]
         do_page = miss & send_page
         do_line = miss & send_line
+        # inflight page the request can ride (lookup BEFORE scheduling)
+        inflight, pidx = find(eng.page_key, pid)
+        pending = jnp.where(inflight, eng.page_arrival[pidx], BIG)
         fab, line_done, page_done = fabric.serve_dual_at(
-            fab, mc, partition=True, ratio=dp.bw_ratio, bw=bw,
+            fab, mc, partition=True, now=clock,
             line_ready=clock, line_bytes=line_wire, line_gate=do_line,
             page_ready=clock, page_bytes=page_wire, page_gate=do_page)
         page_start = page_done - page_wire / jnp.maximum(
@@ -322,10 +368,18 @@ def _schedule(seq: SeqState, fab: FabricState, cfg: KVStoreConfig,
         eng = _gate_tree(do_page, eng,
                          schedule_page(eng, pid, page_start, page_done))
         eng = _gate_tree(do_line, eng,
-                         schedule_line(eng, pid, off, line_done))
-        return (eng, fab), (do_line, do_page)
+                         schedule_line(eng, pid, off, line_done,
+                                       dp.lines_per_page))
+        served_at = jnp.minimum(jnp.where(do_line, line_done, BIG),
+                                jnp.minimum(
+                                    jnp.where(do_page, page_done, BIG),
+                                    pending))
+        served_at = jnp.where(served_at >= BIG / 2, clock + nominal,
+                              served_at)
+        stall = jnp.where(miss, jnp.maximum(served_at - clock, 0.0), 0.0)
+        return (eng, fab), (do_line, do_page, stall)
 
-    (eng, fab), (line_sent, scheduled) = jax.lax.scan(
+    (eng, fab), (line_sent, scheduled, stalls) = jax.lax.scan(
         sched_one, (seq.eng, fab), jnp.arange(r))
 
     n_sub = jnp.sum(line_sent)
@@ -340,6 +394,8 @@ def _schedule(seq: SeqState, fab: FabricState, cfg: KVStoreConfig,
         + n_sched * _wire_bytes(cfg, cfg.page_tokens, False),
         "local_hits": stt["local_hits"] + jnp.sum(local_hit),
         "requests": stt["requests"] + r,
+        # aggregate movement-plane delay: mean per-request stall this step
+        "stall_steps": stt["stall_steps"] + jnp.mean(stalls),
     }
     return seq._replace(eng=eng, stats=stats), fab
 

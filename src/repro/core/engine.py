@@ -12,8 +12,8 @@ State encoding:
                          state (P,) int8 {0 invalid,1 scheduled,2 moved,
                                           3 throttled}, arrival (P,) f32,
                          dirty_cnt (P,) int8 (dirty unit occupancy, §4.3)
-  inflight sub-block buffer: keys (S,) int32 packed (page<<6|off),
-                         arrival (S,) f32
+  inflight sub-block buffer: keys (S,) int32 packed
+                         (page * lines_per_page + off), arrival (S,) f32
 Queue occupancy is tracked by the buffers (an entry is "in the queue" until
 its issue time) + the virtual-channel busy-until clocks in bandwidth.py.
 """
@@ -55,8 +55,13 @@ def init_engine_state(p: DaemonParams) -> EngineState:
     )
 
 
-def pack_line(page_id, offset):
-    return page_id * 64 + offset
+def pack_line(page_id, offset, lines_per_page: int = 64):
+    """Pack (page, line-offset) into one sub-block CAM key.
+
+    `lines_per_page` is the page geometry knob (`DaemonParams.
+    lines_per_page` = page_bytes // line_bytes); it must match the
+    divisor `retire_arrivals` uses to recover the page from a key."""
+    return page_id * lines_per_page + offset
 
 
 # ---------------------------------------------------------------- lookups
@@ -145,9 +150,9 @@ def schedule_page(st: EngineState, page_id, issue_t, arrival_t
     )
 
 
-def schedule_line(st: EngineState, page_id, offset, arrival_t
-                  ) -> EngineState:
-    key = pack_line(page_id, offset)
+def schedule_line(st: EngineState, page_id, offset, arrival_t,
+                  lines_per_page: int = 64) -> EngineState:
+    key = pack_line(page_id, offset, lines_per_page)
     ok, idx = first_free(st.sb_key)
     idx = jnp.where(ok, idx, 0)
     return st._replace(
@@ -169,18 +174,21 @@ def poll_arrivals(st: EngineState, now) -> Tuple[jnp.ndarray, jnp.ndarray]:
     return done, jnp.where(done, st.page_key, -1)
 
 
-def retire_arrivals(st: EngineState, now) -> EngineState:
+def retire_arrivals(st: EngineState, now,
+                    lines_per_page: int = 64) -> EngineState:
     """Release every entry whose data has arrived by `now`.
 
     Page arrival also drops pending sub-block entries of the same page
     (§4.1: later line packets for that page are ignored) — unless the page
     was throttled (§4.3), in which case it is re-requested by the caller.
+    `lines_per_page` must match the `pack_line` geometry the keys were
+    built with (`DaemonParams.lines_per_page`).
     """
     page_done, arrived_pages = poll_arrivals(st, now)
     # drop sub-block entries whose page just arrived: portable broadcast
     # membership test (empty slots have sb_page == -1 and only ever match
     # the -1 placeholders in arrived_pages — a no-op rewrite)
-    sb_page = st.sb_key // 64
+    sb_page = st.sb_key // lines_per_page
     sb_drop = (sb_page[:, None] == arrived_pages[None, :]).any(axis=1)
     sb_done = (st.sb_arrival <= now) | sb_drop
     return st._replace(

@@ -1,24 +1,34 @@
-"""Movement fabric: per-module channel banks + page->module placement.
+"""Movement fabric: per-module link models + channel banks + placement.
 
 The paper's first scalability claim (§5, fig 17/22) is that per-unit
-DaeMon engines span *multiple* compute and memory components. This module
-is the shared substrate for that: a bank of dual-granularity virtual
-channels (line / page / writeback busy-until clocks, one set per memory
-module) plus the page->module placement policy. It is the ONLY home of
+DaeMon engines span *multiple* compute and memory components, and its
+robustness claim (§6, fig 13) is that the design survives "high runtime
+variability in network latencies/bandwidth". This module is the shared
+substrate for both: a bank of dual-granularity virtual channels (line /
+page / writeback busy-until clocks, one set per memory module) driven by
+a first-class, *time-varying* ``LinkModel``, plus the page->module
+placement policy. It is the ONLY home of
 
   * module routing  — ``place`` replaces every inlined ``page % m``;
-  * channel state   — the simulator's five ``(M,)`` busy arrays and the
-    serving store's fixed ``page_cost_steps`` model both collapse into a
-    ``FabricState``;
+  * the link model  — ``LinkModel`` carries per-module base bandwidth, a
+    piecewise-constant bandwidth-multiplier schedule (burst / degradation
+    profiles), and a per-module health mask (flapping / failed links);
+    ``link_bw_at`` is the only sampler;
+  * channel state   — the simulator's five ``(M,)`` busy arrays, the
+    serving store's fixed ``page_cost_steps`` model, and now the §4.1
+    partition ratio all collapse into a ``FabricState`` (the ratio is
+    carried *state*, per module, so adaptive repartitioning is a `where`
+    on the scheme axis, not a recompile);
   * per-module wire accounting — every gated service call also feeds a
     per-module byte ledger, so "sum of per-module bytes == total ledger"
     is testable against both desim and the KV store.
 
-No busy-until arithmetic lives here: every service call delegates to
-``bandwidth.serve_dual`` / ``bandwidth.occupy_busy`` (the single home of
-channel arithmetic, DESIGN.md §1/§5). All transitions are pure pytree ->
-pytree and `where`-gated, so a fabric rides inside jitted scans and can be
-shared by a whole decode batch contending for the same channels.
+No busy-until or controller arithmetic lives here: every service call
+delegates to ``bandwidth.serve_dual`` / ``bandwidth.occupy_busy`` and
+every ratio update to ``bandwidth.adapt_ratio`` (the single home of
+channel arithmetic, DESIGN.md §1/§5/§6). All transitions are pure pytree
+-> pytree and `where`-gated, so a fabric rides inside jitted scans and
+can be shared by a whole decode batch contending for the same channels.
 """
 from __future__ import annotations
 
@@ -42,8 +52,8 @@ class FabricConfig:
     """Static fabric shape: module count + placement policy.
 
     Placement is static (it selects which routing *function* is traced);
-    everything downstream of it — channel clocks, gates, byte ledgers —
-    is traced data.
+    everything downstream of it — the link model, channel clocks, gates,
+    ratios, byte ledgers — is traced data.
     """
     num_modules: int = 1
     placement: str = "interleave"   # one of PLACEMENTS
@@ -57,20 +67,134 @@ class FabricConfig:
             raise ValueError("num_modules must be >= 1")
 
 
+# ------------------------------------------------------------- link model
+class LinkModel(NamedTuple):
+    """Per-module, time-varying physical link description (all traced).
+
+    ``bw`` is the per-module base bandwidth; the effective bandwidth of
+    module `mc` at time `t` is ``bw[mc] * sched_mult[seg(t), mc] *
+    health[seg(t), mc]`` where `seg(t)` is the active segment of the
+    piecewise-constant schedule (knot times ``sched_t``, ascending; the
+    first segment also covers t < sched_t[0] and the last one persists
+    past sched_t[-1]). ``sched_mult`` models background-traffic
+    contention (bursts, progressive degradation); ``health`` is the
+    per-module link-health mask (1 healthy, ->0 failed) that fault
+    monitors watch (`runtime/fault.LinkHealthMonitor`).
+
+    Shapes are static — (M,), (K,), (K, M), (K, M) — so schedules of the
+    same knot count ride a single compiled lattice as data; a constant
+    link is just K=1 all-ones (bit-identical arithmetic to a scalar bw).
+    """
+    bw: jnp.ndarray          # (M,) base bandwidth per module
+    sched_t: jnp.ndarray     # (K,) segment start times, ascending
+    sched_mult: jnp.ndarray  # (K, M) bandwidth multiplier per segment
+    health: jnp.ndarray      # (K, M) health mask per segment, in [0, 1]
+
+
+def constant_link(bw, num_modules: int = None) -> LinkModel:
+    """A time-invariant, fully healthy link: K=1 all-ones schedule."""
+    bw = jnp.asarray(bw, F32)
+    if bw.ndim == 0:
+        bw = jnp.broadcast_to(bw, (num_modules or 1,))
+    m = bw.shape[0]
+    return LinkModel(bw=bw,
+                     sched_t=jnp.zeros((1,), F32),
+                     sched_mult=jnp.ones((1, m), F32),
+                     health=jnp.ones((1, m), F32))
+
+
+def scheduled_link(bw, schedule, num_modules: int = None) -> LinkModel:
+    """LinkModel from a (sched_t (K,), mult, health) schedule triple —
+    typically `repro.sim.workloads.make_link_schedule` output. Owns the
+    broadcast rules: `bw` scalar or (M,); `mult`/`health` (K,) or (K, M).
+    """
+    bw = jnp.asarray(bw, F32)
+    if bw.ndim == 0:
+        bw = jnp.broadcast_to(bw, (num_modules or 1,))
+    m = bw.shape[0]
+    sched_t, mult, health = schedule
+    sched_t = jnp.asarray(sched_t, F32)
+    k = sched_t.shape[0]
+    to_km = lambda a: jnp.broadcast_to(
+        jnp.asarray(a, F32).reshape((k, -1)), (k, m))
+    return LinkModel(bw=bw, sched_t=sched_t, sched_mult=to_km(mult),
+                     health=to_km(health))
+
+
+def _segment(link: LinkModel, now) -> jnp.ndarray:
+    """Active schedule segment at time `now` (traceable int32)."""
+    now = jnp.asarray(now, F32)
+    k = link.sched_t.shape[0]
+    idx = jnp.searchsorted(link.sched_t, now, side="right") - 1
+    return jnp.clip(idx, 0, k - 1)
+
+
+def sample_link(link: LinkModel, mc, now) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(bandwidth multiplier, health) of module `mc` at time `now`."""
+    seg = _segment(link, now)
+    return link.sched_mult[seg, mc], link.health[seg, mc]
+
+
+def link_bw_at(link: LinkModel, mc, now) -> jnp.ndarray:
+    """Effective bandwidth of module `mc`'s link at time `now`.
+
+    The ONLY bandwidth sampler: desim, the serving store, and the tests
+    all read the time-varying substrate through this. A transfer issued
+    at `now` is served at the bandwidth sampled at its issue time
+    (piecewise-frozen service, DESIGN.md §6)."""
+    mult, health = sample_link(link, mc, now)
+    return link.bw[mc] * mult * health
+
+
+def module_health(link: LinkModel, now) -> jnp.ndarray:
+    """(M,) health mask of every module's link at time `now` — what the
+    serving loop feeds `runtime.fault.LinkHealthMonitor`."""
+    seg = _segment(link, now)
+    return link.health[seg]
+
+
+# ------------------------------------------------------------ fabric state
 class FabricState(NamedTuple):
-    """Per-module channel bank. Leaves are (M,) f32."""
+    """Per-module channel bank + the link it runs over.
+
+    Busy/byte leaves are (M,) f32; ``ratio`` is the §4.1 line share as
+    carried per-module state (static schemes simply never update it);
+    ``line_rate``/``page_rate`` are per-module EMAs of the *offered*
+    wire-byte demand per granularity (the repartitioning controller's
+    direction input — see ``bandwidth.adapt_ratio``); ``link`` is the
+    (constant-through-run but traced) LinkModel."""
     line_busy: jnp.ndarray      # line virtual channel busy-until
     page_busy: jnp.ndarray      # page (or shared-FIFO) channel busy-until
     wb_busy: jnp.ndarray        # writeback channel busy-until
     line_bytes: jnp.ndarray     # per-module wire-byte ledgers
     page_bytes: jnp.ndarray
     wb_bytes: jnp.ndarray
+    ratio: jnp.ndarray          # (M,) line share of each module's link
+    line_rate: jnp.ndarray      # (M,) EMA of offered line bytes/service
+    page_rate: jnp.ndarray      # (M,) EMA of offered page bytes/service
+    link: LinkModel
 
 
-def init_fabric(cfg: FabricConfig) -> FabricState:
-    z = lambda: jnp.zeros((cfg.num_modules,), F32)
+# Demand-rate EMA smoothing per service call: ~1/EMA_ALPHA recent
+# requests dominate the offered-demand estimate.
+EMA_ALPHA = 0.08
+
+
+def init_fabric(cfg: FabricConfig, link: LinkModel = None,
+                ratio=0.25) -> FabricState:
+    """Fresh channel bank. `link` defaults to a constant unit-bandwidth
+    link; `ratio` (scalar or (M,)) seeds the carried partition ratio —
+    callers pass their static §4.1 ratio so un-adaptive schemes read it
+    back unchanged forever."""
+    m = cfg.num_modules
+    if link is None:
+        link = constant_link(1.0, m)
+    z = lambda: jnp.zeros((m,), F32)
     return FabricState(line_busy=z(), page_busy=z(), wb_busy=z(),
-                       line_bytes=z(), page_bytes=z(), wb_bytes=z())
+                       line_bytes=z(), page_bytes=z(), wb_bytes=z(),
+                       ratio=jnp.broadcast_to(jnp.asarray(ratio, F32), (m,)),
+                       line_rate=z(), page_rate=z(),
+                       link=link)
 
 
 # ------------------------------------------------------------- placement
@@ -100,8 +224,8 @@ def backlog(fab: FabricState, mc, now) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """(line, page) queueing backlog of module `mc` at time `now` (>= 0).
 
     This is the per-module occupancy pressure the §4.2 selection unit
-    consumes: how far beyond `now` each virtual channel is already
-    committed.
+    and the §4.1 repartitioning controller consume: how far beyond `now`
+    each virtual channel is already committed.
     """
     now = jnp.asarray(now, F32)
     line = jnp.maximum(fab.line_busy[mc] - now, 0.0)
@@ -115,25 +239,62 @@ def total_bytes(fab: FabricState) -> jnp.ndarray:
             + jnp.sum(fab.wb_bytes))
 
 
+# ------------------------------------------------- adaptive repartitioning
+def adapt_ratio_at(fab: FabricState, mc, now, *, adaptive, r_idle,
+                   page_unit, line_occ=0.0, page_occ=0.0,
+                   gain=0.25) -> FabricState:
+    """One controller step on module `mc`'s carried partition ratio.
+
+    Direction comes from the fabric's offered-demand EMAs
+    (``line_rate``/``page_rate``, accrued by `serve_dual_at`); magnitude
+    from the module's observed congestion: queueing backlogs (`backlog`)
+    plus the caller's inflight-buffer occupancies (`line_occ`/`page_occ`
+    in [0, 1], ``engine.utilization`` of the sub-block / page CAMs,
+    buffered-but-unserialized work), measured against `tau` — the
+    service time of one `page_unit`-byte page at the link's current full
+    bandwidth. `r_idle` is the scheme's seed ratio, the idle-regime
+    attractor. The law itself lives in ``bandwidth.adapt_ratio``; the
+    update is `where`-gated on the traceable `adaptive` flag, so
+    static-ratio schemes carry their seed ratio bit-identically forever
+    and the static/adaptive switch rides the scheme axis of one
+    compiled lattice.
+    """
+    line_bl, page_bl = backlog(fab, mc, now)
+    bw = link_bw_at(fab.link, mc, now)
+    tau = jnp.asarray(page_unit, F32) / jnp.maximum(bw, 1e-6)
+    occ_t = (jnp.asarray(line_occ, F32) + jnp.asarray(page_occ, F32)) * tau
+    load_t = line_bl + page_bl + occ_t
+    new = bandwidth.adapt_ratio(
+        fab.ratio[mc], fab.line_rate[mc], fab.page_rate[mc],
+        saturation=load_t / (load_t + tau), r_idle=r_idle, gain=gain)
+    upd = jnp.where(jnp.asarray(adaptive, bool), new, fab.ratio[mc])
+    return fab._replace(ratio=fab.ratio.at[mc].set(upd))
+
+
 # -------------------------------------------------------------- service
-def serve_dual_at(fab: FabricState, mc, *, partition, ratio, bw,
+def serve_dual_at(fab: FabricState, mc, *, partition, now,
                   line_ready, line_bytes, line_gate,
                   page_ready, page_bytes, page_gate
                   ) -> Tuple[FabricState, jnp.ndarray, jnp.ndarray]:
     """One dual-granularity service step on module `mc`'s link.
 
-    Slices the module's channel clocks, delegates to
+    Samples the module's effective bandwidth from the fabric's LinkModel
+    at `now` (the request's issue time), reads the module's carried
+    partition ratio, slices the channel clocks, delegates to
     ``bandwidth.serve_dual`` (bit-identical arithmetic to the pre-fabric
-    inlined slice/scatter), scatters the clocks back, and accrues the
-    gated bytes on the module's ledgers.
+    inlined slice/scatter when the link is constant and the ratio
+    static), scatters the clocks back, and accrues the gated bytes on
+    the module's ledgers.
 
     Returns (fabric', line_done, page_done).
     """
+    bw = link_bw_at(fab.link, mc, now)
     lb, pb, line_done, page_done = bandwidth.serve_dual(
         fab.line_busy[mc], fab.page_busy[mc], partition=partition,
-        ratio=ratio, bw=bw,
+        ratio=fab.ratio[mc], bw=bw,
         line_ready=line_ready, line_bytes=line_bytes, line_gate=line_gate,
         page_ready=page_ready, page_bytes=page_bytes, page_gate=page_gate)
+    a = EMA_ALPHA
     fab = fab._replace(
         line_busy=fab.line_busy.at[mc].set(lb),
         page_busy=fab.page_busy.at[mc].set(pb),
@@ -141,13 +302,23 @@ def serve_dual_at(fab: FabricState, mc, *, partition, ratio, bw,
             jnp.where(line_gate, line_bytes, 0.0)),
         page_bytes=fab.page_bytes.at[mc].add(
             jnp.where(page_gate, page_bytes, 0.0)),
+        # offered-demand EMAs (controller direction input): every service
+        # call is one observation, gated bytes or zero
+        line_rate=fab.line_rate.at[mc].set(
+            (1 - a) * fab.line_rate[mc]
+            + a * jnp.where(line_gate, line_bytes, 0.0)),
+        page_rate=fab.page_rate.at[mc].set(
+            (1 - a) * fab.page_rate[mc]
+            + a * jnp.where(page_gate, page_bytes, 0.0)),
     )
     return fab, line_done, page_done
 
 
-def serve_writeback_at(fab: FabricState, mc, t_ready, nbytes, bw, *, gate
-                       ) -> Tuple[FabricState, jnp.ndarray]:
-    """Serialize an eviction writeback on module `mc`'s reverse channel."""
+def serve_writeback_at(fab: FabricState, mc, t_ready, nbytes, *, gate,
+                       now=None) -> Tuple[FabricState, jnp.ndarray]:
+    """Serialize an eviction writeback on module `mc`'s reverse channel
+    at the link bandwidth sampled at `now` (defaults to `t_ready`)."""
+    bw = link_bw_at(fab.link, mc, t_ready if now is None else now)
     busy, done = bandwidth.occupy_busy(fab.wb_busy[mc], t_ready, nbytes,
                                        bw, gate=gate)
     fab = fab._replace(

@@ -29,6 +29,14 @@ class DaemonParams:
     cpu_ghz: float = 3.6
 
     @property
+    def lines_per_page(self) -> int:
+        """Page geometry: cache lines per page (the sub-block key packing
+        stride used by `engine.pack_line` / `engine.retire_arrivals`).
+        One knob — 4096/64 = 64 by default — instead of a hardcoded 64
+        scattered across the movement plane."""
+        return self.page_bytes // self.line_bytes
+
+    @property
     def lines_per_page_slot(self) -> int:
         """Queue-controller interleave: CL slots served per page slot.
 

@@ -12,8 +12,12 @@ with its own local page pool and engine, contending for ONE movement
 fabric spanning M memory modules (`repro.core.daemon_store` /
 `repro.core.fabric`). Each decode step requests every sequence's hot KV
 pages (real token offsets, so sub-block keys dedup like the simulator's
-packed page<<6|off keys) and the ledger records the wire traffic the
-decode costs on a disaggregated KV tier.
+packed page*lines_per_page+off keys) and the ledger records the wire
+traffic the decode costs on a disaggregated KV tier. The fabric's link
+may be a time-varying `LinkModel` (per-module bandwidth schedule +
+health masks); a `runtime.fault.LinkHealthMonitor` watching the sampled
+health surfaces reshard advisories for degraded/flapping modules in the
+returned ledger.
 """
 from __future__ import annotations
 
@@ -22,6 +26,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.daemon_store import (KVStoreConfig, init_kv_store_batch,
@@ -116,7 +121,8 @@ def paged_request_window(positions, seq_ids, page_tokens: int,
 def serve_batch_paged(params, cfg: ArchConfig, prompts, scfg: ServeConfig,
                       store_cfg: KVStoreConfig,
                       pcfg: PagedServeConfig = PagedServeConfig(),
-                      opt: ModelOptions = None):
+                      opt: ModelOptions = None, link=None,
+                      health_monitor=None):
     """Batched decode with the DaeMon movement plane in the loop.
 
     Runs the same prefill + decode schedule as `serve_batch`, and per
@@ -125,6 +131,14 @@ def serve_batch_paged(params, cfg: ArchConfig, prompts, scfg: ServeConfig,
     per-module channels their page migrations queue on. The decode
     computes from its dense cache; the store is the movement plane of the
     disaggregated KV tier, and its ledger is the cost report.
+
+    `link` (optional `fabric.LinkModel`, knot times in decode steps)
+    makes the fabric's per-module bandwidth/health time-varying;
+    `health_monitor` (optional `runtime.fault.LinkHealthMonitor`) then
+    watches the sampled per-module health each decode step — the ledger
+    gains `link_reshard_modules`, the modules for which a reshard was
+    advised mid-run (a degraded module should shed its pages, the
+    serving analogue of `StragglerDetector.should_reshard`).
 
     Returns (tokens (B, P + max_new_tokens), ledger dict).
     """
@@ -135,7 +149,21 @@ def serve_batch_paged(params, cfg: ArchConfig, prompts, scfg: ServeConfig,
     step = make_decode_fn(cfg, opt)
     key = jax.random.PRNGKey(scfg.seed)
 
-    kv = init_kv_store_batch(store_cfg, b)
+    kv = init_kv_store_batch(store_cfg, b, link=link)
+    reshard_advised = set()
+    if health_monitor is not None and link is not None:
+        # snapshot the (host-known, constant) schedule once: per-step
+        # sampling is then a numpy searchsorted, not a device round-trip
+        # in the decode hot loop
+        sched_t = jax.device_get(link.sched_t)
+        sched_health = jax.device_get(link.health)
+
+    def watch_health(clock_step: int):
+        if health_monitor is None or link is None:
+            return
+        seg = np.clip(np.searchsorted(sched_t, clock_step, side="right")
+                      - 1, 0, len(sched_t) - 1)
+        reshard_advised.update(health_monitor.observe(sched_health[seg]))
     n_remote = b * pcfg.pages_per_seq
     rshape = (n_remote, store_cfg.page_tokens, store_cfg.kv_heads,
               store_cfg.head_dim)
@@ -159,6 +187,7 @@ def serve_batch_paged(params, cfg: ArchConfig, prompts, scfg: ServeConfig,
         nxt, state = step(params, state, prompts[:, i:i + 1], jnp.int32(i),
                           sub, jnp.float32(scfg.temperature))
         kv = kv_step(kv, jnp.int32(i))
+        watch_health(i + 1)
     tok = nxt
     gen = []
     for i in range(scfg.max_new_tokens):
@@ -167,4 +196,8 @@ def serve_batch_paged(params, cfg: ArchConfig, prompts, scfg: ServeConfig,
         tok, state = step(params, state, tok, jnp.int32(p + i), sub,
                           jnp.float32(scfg.temperature))
         kv = kv_step(kv, jnp.int32(p + i))
-    return jnp.concatenate(out + gen, axis=1), store_ledger(kv)
+        watch_health(p + i + 1)
+    led = store_ledger(kv)
+    if health_monitor is not None:
+        led["link_reshard_modules"] = sorted(reshard_advised)
+    return jnp.concatenate(out + gen, axis=1), led

@@ -9,17 +9,26 @@ virtual channels over the network and the remote-memory bus — each
 service call delegating to ``repro.core.bandwidth.serve_dual``, the only
 place channel arithmetic lives — plus page->module placement
 (``fabric.place``, the only home of module routing), link compression,
-and an MLP-window core model. The serving KV store
-(``repro.core.daemon_store``) consumes the SAME fabric bank, so simulator
-and store cannot diverge on routing or channel arithmetic.
+and an MLP-window core model. Network variability is a property of the
+fabric's ``LinkModel`` (per-module piecewise time-varying bandwidth
+multipliers + health masks, sampled at each request's issue time), not a
+hand-threaded per-request array; ``make_net`` attaches a schedule
+(``repro.sim.workloads.make_link_schedule`` profiles) and a constant
+schedule is bit-identical to a scalar bandwidth. The serving KV store
+(``repro.core.daemon_store``) consumes the SAME fabric bank and link
+model, so simulator and store cannot diverge on routing, channel
+arithmetic, or variability semantics.
 
 Scheme flags are *traced data* (``repro.sim.schemes.TraceableFlags``), not
 static Python: every scheme switch in the per-request transition is a
-``where``, so ``simulate_lattice`` runs the whole scheme x network x
-bw-ratio lattice as ONE compiled program ``vmap``ped over both axes — one
-jit trace per (trace shape, footprint, SimConfig) instead of one per
-scheme. ``simulate_grid`` is the single-scheme wrapper kept for paired
-baseline/variant comparisons.
+``where`` — including the static-vs-adaptive §4.1 repartitioning switch
+(the partition ratio is carried per-module state in the fabric, updated by
+``bandwidth.adapt_ratio`` only when the `adaptive` flag is set) — so
+``simulate_lattice`` runs the whole scheme x network x bw-ratio x
+link-profile lattice as ONE compiled program ``vmap``ped over both axes —
+one jit trace per (trace shape, footprint, SimConfig, schedule knot
+count) instead of one per scheme or per profile. ``simulate_grid`` is the
+single-scheme wrapper kept for paired baseline/variant comparisons.
 
 Fidelity notes (vs the paper's cycle-accurate setup) are in DESIGN.md.
 """
@@ -37,7 +46,7 @@ from repro.core import bandwidth, fabric
 from repro.core.engine import (EngineState, gate_tree as _gate_tree,
                                init_engine_state, find, retire_arrivals,
                                schedule_line, schedule_page,
-                               select_granularity)
+                               select_granularity, utilization)
 from repro.core.params import DaemonParams, NetworkParams
 from repro.sim.schemes import SchemeFlags, as_traceable, stack_flags
 from repro.sim.trace import Trace
@@ -80,10 +89,22 @@ STAT_KEYS = ("i", "n", "hits", "lat_sum", "pages_moved", "lines_moved",
              "page_drops", "dirty_evicts")
 
 
-def _init_state(cfg: SimConfig, n_pages: int) -> SimState:
+def _net_link(net) -> fabric.LinkModel:
+    """The network-side LinkModel carried by a net dict (see `make_net`)."""
+    return fabric.LinkModel(bw=jnp.asarray(net["bw"], F32),
+                            sched_t=jnp.asarray(net["sched_t"], F32),
+                            sched_mult=jnp.asarray(net["sched_mult"], F32),
+                            health=jnp.asarray(net["sched_health"], F32))
+
+
+def _init_state(cfg: SimConfig, n_pages: int, net, ratio0) -> SimState:
     cap = max(WAYS, int(n_pages * cfg.local_frac))
     sets = max(1, cap // WAYS)
     fcfg = cfg.fabric_config()
+    # the remote-memory bus is a constant link (the paper's variability
+    # axis is the network); it still carries its own adapted ratio
+    mem_link = fabric.constant_link(jnp.asarray(net["membw"], F32),
+                                    cfg.num_mc)
     return SimState(
         t=jnp.zeros((), F32),
         ring=jnp.zeros((cfg.mlp,), F32),
@@ -92,29 +113,38 @@ def _init_state(cfg: SimConfig, n_pages: int) -> SimState:
         tbl_valid=jnp.full((sets, WAYS), BIG, F32),
         tbl_dirty=jnp.zeros((sets, WAYS), bool),
         eng=init_engine_state(cfg.daemon),
-        net=fabric.init_fabric(fcfg),
-        mem=fabric.init_fabric(fcfg),
+        net=fabric.init_fabric(fcfg, link=_net_link(net), ratio=ratio0),
+        mem=fabric.init_fabric(fcfg, link=mem_link, ratio=ratio0),
         stats={k: jnp.zeros((), F32) for k in STAT_KEYS},
     )
 
 
-def make_step(flags, cfg: SimConfig):
+def make_step(flags, cfg: SimConfig, net, comp_ratio, warm_after):
     """Per-request transition. `flags` may be a SchemeFlags (converted) or
     a TraceableFlags pytree — possibly traced, so every scheme switch
-    below is `where`-gated and one compiled step serves any scheme."""
+    below is `where`-gated and one compiled step serves any scheme. `net`
+    (latencies; the link itself rides in the fabric state), `comp_ratio`
+    and `warm_after` are closed over — traced per lattice point, never
+    broadcast per request."""
     fl = as_traceable(flags)
     dp = cfg.daemon
     comp_lat = dp.compress_latency_ns
     line_b = float(dp.line_bytes)
     page_b = float(dp.page_bytes)
+    lpp = dp.lines_per_page
     fcfg = cfg.fabric_config()
+    membw = jnp.asarray(net["membw"], F32)
+    local_lat = jnp.asarray(net["local_lat"], F32)
+    remote_lat = jnp.asarray(net["remote_lat"], F32)
+    trans_lat = jnp.asarray(net["trans_lat"], F32)
+    switch = jnp.asarray(net["switch"], F32)
+    warm_after = jnp.asarray(warm_after, F32)
+    comp_ratio = jnp.asarray(comp_ratio, F32)
 
     def step(st: SimState, inp):
-        page, off, gap, wr, net, comp_ratio = inp
+        page, off, gap, wr = inp
         sets = st.tbl_page.shape[0]
-        ratio = fl.bw_ratio
         want_page = (fl.move_pages | fl.page_free) & fl.use_local_mem
-        line_share, page_share = bandwidth.shares(fl.partition, ratio)
 
         # ---- core issue (MLP window) ----
         oldest = jnp.min(st.ring)
@@ -132,7 +162,7 @@ def make_step(flags, cfg: SimConfig):
             | fl.local_only
         inflight_tbl = present & (valid_t > t_issue)
 
-        eng = retire_arrivals(st.eng, t_issue)
+        eng = retire_arrivals(st.eng, t_issue, lpp)
 
         # ---- engine decision (§4.2) ----
         send_line, send_page = select_granularity(
@@ -147,24 +177,46 @@ def make_step(flags, cfg: SimConfig):
         send_line = jnp.where(line_only, ~is_hit, send_line) & ~fl.local_only
 
         mc = fabric.place(fcfg, page)
-        bw = net["bw"][mc] * net["bw_mult"]
-        sw = net["switch"][mc]
-        membw = net["membw"]
-        t0 = t_issue + sw + net["trans_lat"] + net["remote_lat"]
+        sw = switch[mc]
+        t0 = t_issue + sw + trans_lat + remote_lat
 
+        # ---- adaptive §4.1 repartitioning (controller before service:
+        # each fabric's carried per-module ratio is nudged toward its own
+        # observed backlog + the engines' buffer occupancies; `where`-gated
+        # on the traceable adaptive flag, so static schemes carry their
+        # seed ratio bit-identically) ----
+        # floored like occupy_busy's divide: a health-0 (hard-failed)
+        # segment must yield huge-but-finite latencies, not inf/NaN stats
+        bw = jnp.maximum(fabric.link_bw_at(st.net.link, mc, t_issue), 1e-6)
+        sb_occ = utilization(eng.sb_key)
+        pg_occ = utilization(eng.page_key)
         wire_b = jnp.where(fl.compress, page_b / comp_ratio, page_b)
+        net_fab = fabric.adapt_ratio_at(
+            st.net, mc, t_issue, adaptive=fl.adaptive,
+            r_idle=fl.bw_ratio, page_unit=wire_b,
+            line_occ=sb_occ, page_occ=pg_occ)
+        mem_fab = fabric.adapt_ratio_at(
+            st.mem, mc, t_issue, adaptive=fl.adaptive,
+            r_idle=fl.bw_ratio, page_unit=page_b,
+            line_occ=sb_occ, page_occ=pg_occ)
+        ratio = net_fab.ratio[mc]
+        line_share, page_share = bandwidth.shares(fl.partition, ratio)
+        mem_line_share, _ = bandwidth.shares(fl.partition,
+                                             mem_fab.ratio[mc])
+
         comp_delay = jnp.where(fl.compress, comp_lat, 0.0)
         move_page_physically = send_page & ~fl.page_free
 
         # ---- remote-memory bus then network link: each a dual-granularity
         # channel bank on the shared fabric (partitioned virtual channels
-        # or one shared FIFO per module) ----
+        # or one shared FIFO per module, at the LinkModel bandwidth
+        # sampled at this request's issue time) ----
         mem_fab, lm_done, pm_done = fabric.serve_dual_at(
-            st.mem, mc, partition=fl.partition, ratio=ratio, bw=membw,
+            mem_fab, mc, partition=fl.partition, now=t_issue,
             line_ready=t0, line_bytes=line_b, line_gate=send_line,
             page_ready=t0, page_bytes=page_b, page_gate=move_page_physically)
         net_fab, ln_done, pn_done = fabric.serve_dual_at(
-            st.net, mc, partition=fl.partition, ratio=ratio, bw=bw,
+            net_fab, mc, partition=fl.partition, now=t_issue,
             line_ready=lm_done, line_bytes=line_b, line_gate=send_line,
             page_ready=pm_done + comp_delay, page_bytes=wire_b,
             page_gate=move_page_physically)
@@ -175,25 +227,25 @@ def make_step(flags, cfg: SimConfig):
         page_arrival = jnp.where(move_page_physically,
                                  pn_done + sw + comp_delay, BIG)
         # page-free: materializes at the cost of one line-granularity access
-        free_t = (t_issue + 2 * sw + net["trans_lat"]
-                  + net["remote_lat"] + line_b / bw + line_b / membw)
+        free_t = (t_issue + 2 * sw + trans_lat
+                  + remote_lat + line_b / bw + line_b / membw)
         page_arrival = jnp.where(fl.page_free & send_page, free_t,
                                  page_arrival)
 
         # ---- serve time ----
         cand = jnp.minimum(jnp.minimum(line_arrival, page_arrival),
                            pending_arrival)
-        untracked = (t_issue + 2 * sw + net["trans_lat"]
-                     + net["remote_lat"] + line_b / (bw * line_share)
-                     + line_b / (membw * line_share))
+        untracked = (t_issue + 2 * sw + trans_lat
+                     + remote_lat + line_b / (bw * line_share)
+                     + line_b / (membw * mem_line_share))
         cand = jnp.where(cand >= BIG / 2, untracked, cand)
-        done = jnp.where(is_hit, t_issue + net["local_lat"], cand)
+        done = jnp.where(is_hit, t_issue + local_lat, cand)
 
         # ---- engine bookkeeping (gated insertions) ----
         eng = _gate_tree(send_page, eng,
                          schedule_page(eng, page, pn_start, page_arrival))
         eng = _gate_tree(send_line & fl.move_lines, eng,
-                         schedule_line(eng, page, off, line_arrival))
+                         schedule_line(eng, page, off, line_arrival, lpp))
 
         # ---- local table update (insert page at LRU/FIFO victim) ----
         do_insert = send_page & fl.use_local_mem
@@ -203,7 +255,7 @@ def make_step(flags, cfg: SimConfig):
         wb = do_insert & evict_dirty
         wb_bytes = jnp.where(wb, wire_b, 0.0)
         net_fab, _ = fabric.serve_writeback_at(net_fab, mc, t_issue,
-                                               wire_b, bw, gate=wb)
+                                               wire_b, gate=wb)
 
         def upd(tbl, val, gate, w):
             return tbl.at[set_idx, w].set(
@@ -220,7 +272,7 @@ def make_step(flags, cfg: SimConfig):
 
         # ---- stats (warmup-gated: first `warm_after` requests excluded
         # from latency/hit accounting; total_time still covers the run) ----
-        warm = st.stats["i"] >= net["warm_after"]
+        warm = st.stats["i"] >= warm_after
         lat = jnp.where(warm, done - t_issue, 0.0)
         served_line = (~is_hit) & (line_arrival <= jnp.minimum(
             page_arrival, pending_arrival))
@@ -262,37 +314,13 @@ def make_step(flags, cfg: SimConfig):
     return step
 
 
-def _net_xs(net, r, warm_after, bw_mult) -> dict:
-    """Per-request broadcast of a net dict (+ warmup boundary) — the
-    scan-xs layout every trace replay (lattice point or `run_trace`)
-    feeds `make_step`."""
-    bw = jnp.asarray(net["bw"], F32)
-    sw = jnp.asarray(net["switch"], F32)
-    return {"bw": jnp.broadcast_to(bw, (r,) + bw.shape),
-            "switch": jnp.broadcast_to(sw, (r,) + sw.shape),
-            "membw": jnp.broadcast_to(jnp.asarray(net["membw"], F32),
-                                      (r,)),
-            "local_lat": jnp.broadcast_to(
-                jnp.asarray(net["local_lat"], F32), (r,)),
-            "remote_lat": jnp.broadcast_to(
-                jnp.asarray(net["remote_lat"], F32), (r,)),
-            "trans_lat": jnp.broadcast_to(
-                jnp.asarray(net["trans_lat"], F32), (r,)),
-            "warm_after": jnp.broadcast_to(
-                jnp.asarray(warm_after, F32), (r,)),
-            "bw_mult": bw_mult}
-
-
 def _simulate_point(cfg, n_pages, flags, warm_after, trace_arrays, net,
                     comp_ratio):
     """One (scheme, net) lattice point on pure arrays — the vmap kernel."""
-    st = _init_state(cfg, n_pages)
-    step = make_step(flags, cfg)
-    page, off, gap, wr, bw_mult = trace_arrays
-    r = page.shape[0]
-    xs = (page, off, gap, wr, _net_xs(net, r, warm_after, bw_mult),
-          jnp.broadcast_to(jnp.asarray(comp_ratio, F32), (r,)))
-    final, _ = jax.lax.scan(step, st, xs)
+    ratio0 = as_traceable(flags).bw_ratio
+    st = _init_state(cfg, n_pages, net, ratio0)
+    step = make_step(flags, cfg, net, comp_ratio, warm_after)
+    final, _ = jax.lax.scan(step, st, trace_arrays)
     total_time = jnp.maximum(jnp.max(final.ring), final.t)
     s = final.stats
     misses = jnp.maximum(s["n"] - s["hits"], 1.0)
@@ -314,7 +342,7 @@ def _simulate_point(cfg, n_pages, flags, warm_after, trace_arrays, net,
 def _lattice_jit(cfg, n_pages, tflags, warm_after, trace_arrays, nets,
                  comp_ratio):
     """vmap(schemes) o vmap(nets) over `_simulate_point`, jitted once per
-    (SimConfig, footprint, trace shape)."""
+    (SimConfig, footprint, trace shape, schedule knot count)."""
     point = partial(_simulate_point, cfg, n_pages)
     over_nets = jax.vmap(point, in_axes=(None, None, None, 0, None))
     over_schemes = jax.vmap(over_nets, in_axes=(0, None, None, None, 0))
@@ -327,24 +355,25 @@ def lattice_cache_size() -> int:
 
 
 def simulate_lattice(schemes, cfg: SimConfig, trace: Trace, nets,
-                     comp_ratio, bw_mult=None, warm_frac: float = 0.3):
+                     comp_ratio, warm_frac: float = 0.3):
     """Every scheme x every net over one trace in ONE compiled program.
 
-    schemes: sequence of SchemeFlags / TraceableFlags — bw-ratio variants
-    are just more entries on the scheme axis. comp_ratio: scalar or one
-    value per scheme. Returns [scheme][net] -> metrics dict of floats.
-    The jit trace is cached per (SimConfig, footprint, trace shape), so
-    repeated sweeps — more ratios, more networks — cost compile time once.
+    schemes: sequence of SchemeFlags / TraceableFlags — bw-ratio and
+    adaptive variants are just more entries on the scheme axis.
+    nets: `make_net` dicts — link-schedule profiles (burst / degradation /
+    flap, see `repro.sim.workloads.make_link_schedule`) are just more
+    entries on the net axis, provided they share a knot count.
+    comp_ratio: scalar or one value per scheme. Returns [scheme][net] ->
+    metrics dict of floats. The jit trace is cached per (SimConfig,
+    footprint, trace shape, knot count), so repeated sweeps — more
+    ratios, more networks, more profiles — cost compile time once.
     """
     schemes = list(schemes)
     if not schemes:
         raise ValueError("simulate_lattice needs at least one scheme")
     r = len(trace.page)
-    if bw_mult is None:
-        bw_mult = np.ones(r, np.float32)
     arrays = (jnp.asarray(trace.page), jnp.asarray(trace.off),
-              jnp.asarray(trace.gap), jnp.asarray(trace.wr),
-              jnp.asarray(bw_mult, F32))
+              jnp.asarray(trace.gap), jnp.asarray(trace.wr))
     stacked = {k: jnp.stack([jnp.asarray(n[k], F32) for n in nets])
                for k in nets[0]}
     cr = jnp.broadcast_to(jnp.asarray(comp_ratio, F32), (len(schemes),))
@@ -360,32 +389,51 @@ def run_trace(scheme_flags, cfg: SimConfig, trace: Trace, net,
               comp_ratio, warm_frac: float = 0.3) -> SimState:
     """Replay one trace under one scheme/net and return the final
     SimState — the state-level sibling of `simulate_grid`, for callers
-    that need the movement internals (fabric channel banks, per-module
-    byte ledgers, engine buffers) rather than the metrics dict."""
-    st = _init_state(cfg, trace.n_pages)
-    step = make_step(scheme_flags, cfg)
+    that need the movement internals (fabric channel banks, link model,
+    adapted ratios, per-module byte ledgers, engine buffers) rather than
+    the metrics dict."""
     r = len(trace.page)
+    ratio0 = as_traceable(scheme_flags).bw_ratio
+    st = _init_state(cfg, trace.n_pages, net, ratio0)
+    step = make_step(scheme_flags, cfg, net, comp_ratio, warm_frac * r)
     xs = (jnp.asarray(trace.page), jnp.asarray(trace.off),
-          jnp.asarray(trace.gap), jnp.asarray(trace.wr),
-          _net_xs(net, r, warm_frac * r, jnp.ones((r,), F32)),
-          jnp.broadcast_to(jnp.asarray(comp_ratio, F32), (r,)))
+          jnp.asarray(trace.gap), jnp.asarray(trace.wr))
     final, _ = jax.lax.scan(step, st, xs)
     return final
 
 
 def simulate_grid(scheme_flags, cfg: SimConfig, trace: Trace,
-                  nets, comp_ratio, bw_mult=None,
-                  warm_frac: float = 0.3):
+                  nets, comp_ratio, warm_frac: float = 0.3):
     """One scheme x one trace over a list of network configs (a lattice of
     scheme-size 1 — kept for paired baseline/variant comparisons)."""
     return simulate_lattice([scheme_flags], cfg, trace, nets, comp_ratio,
-                            bw_mult, warm_frac)[0]
+                            warm_frac)[0]
 
 
 def make_net(p: NetworkParams, num_mc: int = 1, bw_factors=None,
-             switches=None) -> dict:
+             switches=None, schedule=None) -> dict:
+    """Network point: per-module base bandwidths + latencies + the link's
+    time-varying schedule.
+
+    `schedule` is a (sched_t (K,), mult (K,) or (K, M), health (K,) or
+    (K, M)) triple — typically `repro.sim.workloads.make_link_schedule`
+    output. Default: a K=1 constant, fully-healthy schedule, which is
+    bit-identical to the pre-LinkModel scalar-bandwidth path (pinned by
+    the seed golden). Within one `simulate_lattice` call every net must
+    share a knot count so profiles stack on the net axis."""
     bw_factors = bw_factors or [p.bw_factor] * num_mc
     switches = switches or [p.switch_latency_ns] * num_mc
+    if schedule is None:
+        sched_t = np.zeros((1,), np.float32)
+        mult = np.ones((1, num_mc), np.float32)
+        health = np.ones((1, num_mc), np.float32)
+    else:
+        sched_t, mult, health = schedule
+        sched_t = np.asarray(sched_t, np.float32)
+        to_km = lambda a: np.broadcast_to(
+            np.asarray(a, np.float32).reshape((len(sched_t), -1)),
+            (len(sched_t), num_mc)).copy()
+        mult, health = to_km(mult), to_km(health)
     return {
         "bw": np.asarray([p.dram_bw_gbps / f for f in bw_factors],
                          np.float32),
@@ -394,4 +442,7 @@ def make_net(p: NetworkParams, num_mc: int = 1, bw_factors=None,
         "local_lat": np.float32(p.local_mem_latency_ns),
         "remote_lat": np.float32(p.remote_mem_latency_ns),
         "trans_lat": np.float32(p.translation_latency_ns),
+        "sched_t": sched_t,
+        "sched_mult": mult,
+        "sched_health": health,
     }

@@ -11,6 +11,11 @@
                ALWAYS both (no selection) (§4.1)
   PQ         — BP + selection granularity unit (§4.2), no compression
   DaeMon     — PQ + LC (the full design)
+  DaeMon-adaptive — DaeMon with the §4.1 partition ratio as *carried
+               state*: a per-module controller nudges the line/page split
+               toward the observed channel-backlog + buffer-occupancy
+               demand (`bandwidth.adapt_ratio`), instead of the static
+               25%. `bw_ratio` is the controller's seed value.
 
 `SchemeFlags` is the human-facing registry entry (static Python bools).
 `TraceableFlags` is its movement-plane pytree twin: jnp bool/f32 leaves
@@ -38,7 +43,8 @@ class SchemeFlags:
     selection: bool = False      # §4.2 selection granularity unit
     compress: bool = False       # §4.4 link compression on pages
     use_local_mem: bool = True   # cache-line scheme: False
-    bw_ratio: float = 0.25
+    adaptive: bool = False       # §4.1 ratio as adapted per-module state
+    bw_ratio: float = 0.25       # static ratio / adaptive seed
 
 
 class TraceableFlags(NamedTuple):
@@ -52,6 +58,7 @@ class TraceableFlags(NamedTuple):
     selection: jnp.ndarray
     compress: jnp.ndarray
     use_local_mem: jnp.ndarray
+    adaptive: jnp.ndarray
     bw_ratio: jnp.ndarray
 
 
@@ -83,6 +90,9 @@ SCHEMES = {
     "pq": SchemeFlags("pq", partition=True, selection=True),
     "daemon": SchemeFlags("daemon", partition=True, selection=True,
                           compress=True),
+    "daemon-adaptive": SchemeFlags("daemon-adaptive", partition=True,
+                                   selection=True, compress=True,
+                                   adaptive=True),
 }
 
 PAPER_FIG3 = ("local", "cache-line", "remote", "page-free", "cl+page",

@@ -1,4 +1,5 @@
-"""The paper's 13 workloads as parameterized memory-access models (Table 3).
+"""The paper's 13 workloads as parameterized memory-access models (Table 3)
+plus the time-varying link-schedule profiles the robustness axis replays.
 
 Each workload is reduced to the features that drive data-movement behavior
 in a fully disaggregated system:
@@ -12,10 +13,21 @@ in a fully disaggregated system:
 Values are calibrated against the paper's own aggregates (§6, fig 3/8/9/10)
 — see tests/test_sim.py, tests/test_movement_plane.py and
 EXPERIMENTS.md §Benchmarks.
+
+Link profiles (`LINK_PROFILES` / `make_link_schedule`) are the scenario
+axis of the paper's robustness claim ("high runtime variability in network
+latencies/bandwidth", fig 13): piecewise-constant bandwidth-multiplier +
+per-module health schedules that `desim.make_net` attaches to the fabric's
+`LinkModel` and `benchmarks/robustness.py` sweeps against the scheme
+lattice. Every profile emits the same knot count so different profiles
+stack on the lattice's net axis — one compiled program, no per-profile
+recompiles.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+
+import numpy as np
 
 
 @dataclass(frozen=True)
@@ -75,3 +87,72 @@ POOR = ("kc", "tr", "pr", "nw")
 MEDIUM = ("bf", "bc", "ts")
 HIGH = ("sp", "sl", "hp", "pf", "dr", "rs")
 ORDER = POOR + MEDIUM + HIGH
+
+
+# --------------------------------------------------- link-schedule profiles
+@dataclass(frozen=True)
+class LinkProfile:
+    """A time-varying link scenario, reduced to the knobs that matter:
+
+    kind       — constant | burst | degrade | flap
+    depth      — bandwidth multiplier inside a contention burst
+    floor      — terminal multiplier of a progressive degradation ramp
+    bursts     — contention episodes across the horizon (burst/flap)
+    duty       — fraction of each episode period spent degraded
+    fail_module/fail_health — which module's link flaps, and how low its
+                 health mask drops while flapping (flap only)
+    """
+    name: str
+    kind: str
+    depth: float = 0.35
+    floor: float = 0.40
+    bursts: int = 4
+    duty: float = 0.5
+    fail_module: int = 0
+    fail_health: float = 0.1
+
+
+LINK_PROFILES = {
+    "constant": LinkProfile("constant", "constant"),
+    # heavy background contention bursts: 15% of bandwidth left
+    "burst": LinkProfile("burst", "burst", depth=0.15),
+    # progressive congestion: ramps to a quarter of nominal bandwidth
+    "degrade": LinkProfile("degrade", "degrade", floor=0.25),
+    # one module's link flapping to near-dead
+    "flap": LinkProfile("flap", "flap", fail_health=0.05),
+}
+
+
+def make_link_schedule(profile, horizon: float, num_modules: int = 1,
+                       knots: int = 24):
+    """Piecewise-constant link schedule over [0, horizon).
+
+    Returns (sched_t (K,), mult (K, M), health (K, M)) numpy arrays for
+    `desim.make_net(schedule=...)` / `fabric.LinkModel`. The last segment
+    persists past the horizon (searchsorted-clip semantics), so an
+    underestimated horizon degrades gracefully. All profiles emit the
+    same K for a given `knots`, so a profile sweep rides ONE compiled
+    lattice as data on the net axis.
+    """
+    p = LINK_PROFILES[profile] if isinstance(profile, str) else profile
+    k, m = int(knots), int(num_modules)
+    if k < 2:
+        raise ValueError("knots must be >= 2")
+    t = np.linspace(0.0, float(horizon), k, endpoint=False,
+                    dtype=np.float32)
+    mult = np.ones((k, m), np.float32)
+    health = np.ones((k, m), np.float32)
+    if p.kind == "burst":
+        period = max(2, k // p.bursts)
+        in_burst = (np.arange(k) % period) < max(1, round(period * p.duty))
+        mult[in_burst, :] = p.depth
+    elif p.kind == "degrade":
+        mult[:] = np.linspace(1.0, p.floor, k,
+                              dtype=np.float32)[:, None]
+    elif p.kind == "flap":
+        period = max(2, k // p.bursts)
+        down = (np.arange(k) % period) < max(1, round(period * p.duty))
+        health[down, p.fail_module % m] = p.fail_health
+    elif p.kind != "constant":
+        raise ValueError(f"unknown link profile kind {p.kind!r}")
+    return t, mult, health

@@ -1,0 +1,302 @@
+"""The time-varying link plane + adaptive repartitioning controller:
+schedule-sampling semantics, bit-identical static path (constant schedule
++ static ratio == the default/seed-golden path), single-compile behavior
+of the schemes x link-profiles robustness lattice, controller bounds
+(never starves either channel), byte conservation under time-varying
+bandwidth, the serving store against scheduled links, and the
+link-health fault monitor."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st as hyp_st  # optional-hypothesis shim
+
+from repro.core import bandwidth, fabric
+from repro.core.bandwidth import RATIO_MAX, RATIO_MIN, adapt_ratio
+from repro.core.daemon_store import (KVStoreConfig, init_kv_store,
+                                     init_kv_store_batch, ledger,
+                                     link_bytes_per_step, page_cost_steps,
+                                     step_fetch, step_fetch_batch)
+from repro.core.fabric import FabricConfig, LinkModel, constant_link
+from repro.core.params import NetworkParams
+from repro.runtime.fault import LinkHealthMonitor
+from repro.sim.desim import (SimConfig, lattice_cache_size, make_net,
+                             run_trace, simulate_lattice)
+from repro.sim.schemes import SCHEMES, with_ratio
+from repro.sim.trace import generate_trace
+from repro.sim.workloads import (LINK_PROFILES, WORKLOADS,
+                                 make_link_schedule)
+
+
+# ------------------------------------------------------- schedule sampling
+def test_link_schedule_sampling_piecewise_semantics():
+    link = LinkModel(
+        bw=jnp.asarray([10.0, 20.0], jnp.float32),
+        sched_t=jnp.asarray([0.0, 100.0, 200.0], jnp.float32),
+        sched_mult=jnp.asarray([[1.0, 1.0], [0.5, 1.0], [0.25, 0.75]],
+                               jnp.float32),
+        health=jnp.asarray([[1.0, 1.0], [1.0, 0.1], [1.0, 1.0]],
+                           jnp.float32))
+    # before the first knot -> first segment; past the last -> last
+    assert float(fabric.link_bw_at(link, 0, -5.0)) == 10.0
+    assert float(fabric.link_bw_at(link, 0, 0.0)) == 10.0
+    assert float(fabric.link_bw_at(link, 0, 150.0)) == 5.0
+    assert float(fabric.link_bw_at(link, 0, 1e9)) == 2.5
+    # health multiplies bandwidth and is what module_health reports
+    assert float(fabric.link_bw_at(link, 1, 150.0)) == pytest.approx(2.0)
+    np.testing.assert_allclose(np.asarray(fabric.module_health(link, 150.0)),
+                               [1.0, 0.1])
+    np.testing.assert_allclose(
+        np.asarray(fabric.module_health(link, 250.0)), [1.0, 1.0])
+
+
+def test_constant_link_is_all_ones():
+    link = constant_link(7.0, 3)
+    assert link.bw.shape == (3,)
+    for t in (0.0, 1.0, 1e6):
+        for m in range(3):
+            assert float(fabric.link_bw_at(link, m, t)) == 7.0
+
+
+def test_make_link_schedule_profiles_share_shapes():
+    shapes = set()
+    for name, prof in LINK_PROFILES.items():
+        t, mult, health = make_link_schedule(prof, 1000.0, 4, knots=16)
+        shapes.add((t.shape, mult.shape, health.shape))
+        assert mult.min() > 0.0 and health.min() >= 0.0
+        if name == "constant":
+            assert mult.min() == 1.0 and health.min() == 1.0
+        if name == "flap":
+            assert health.min() < 0.5          # one module actually fails
+            assert health[:, 1:].min() == 1.0  # only the flapped module
+    assert len(shapes) == 1       # profiles stack on the lattice net axis
+
+
+# ----------------------------------------- static path stays bit-identical
+def test_constant_schedule_static_ratio_bit_identical():
+    """An explicit all-ones schedule (K=4) must reproduce the default
+    (K=1 constant) lattice bit-exactly for static schemes — the pin that
+    the LinkModel refactor did not perturb the seed-golden path."""
+    w = WORKLOADS["pr"]
+    tr = generate_trace(w, 1200, seed=11)
+    p = NetworkParams()
+    sched = (np.asarray([0.0, 10.0, 20.0, 30.0], np.float32),
+             np.ones((4,), np.float32), np.ones((4,), np.float32))
+    schemes = [SCHEMES["daemon"], SCHEMES["remote"],
+               with_ratio(SCHEMES["bp"], 0.5)]
+    base = simulate_lattice(schemes, SimConfig(), tr, [make_net(p)],
+                            w.comp_ratio)
+    expl = simulate_lattice(schemes, SimConfig(), tr,
+                            [make_net(p, schedule=sched)], w.comp_ratio)
+    for i in range(len(schemes)):
+        for key in base[i][0]:
+            assert base[i][0][key] == expl[i][0][key], key
+
+
+def test_schemes_by_profiles_lattice_single_compile():
+    """The whole robustness grid — static + adaptive schemes x all link
+    profiles — adds exactly ONE jit trace (profiles are data on the net
+    axis, adaptivity is data on the scheme axis)."""
+    w = WORKLOADS["bc"]
+    tr = generate_trace(w, 600, seed=3)
+    nets = [make_net(NetworkParams(), num_mc=2,
+                     schedule=make_link_schedule(prof, 1e5, 2, knots=8))
+            for prof in LINK_PROFILES]
+    schemes = [with_ratio(SCHEMES["daemon"], r) for r in (0.25, 0.5)] + [
+        SCHEMES["daemon-adaptive"]]
+    before = lattice_cache_size()
+    simulate_lattice(schemes, SimConfig(num_mc=2), tr, nets, w.comp_ratio)
+    assert lattice_cache_size() - before == 1
+    # different profile mix / horizons, same shapes: still no recompile
+    nets2 = [make_net(NetworkParams(), num_mc=2,
+                      schedule=make_link_schedule("burst", h, 2, knots=8))
+             for h in (5e4, 1e5, 2e5, 4e5)]
+    simulate_lattice(schemes, SimConfig(num_mc=2), tr, nets2, w.comp_ratio)
+    assert lattice_cache_size() - before == 1
+
+
+# --------------------------------------------------- controller properties
+@settings(max_examples=50, deadline=None)
+@given(hyp_st.floats(RATIO_MIN, RATIO_MAX),
+       hyp_st.floats(0.0, 1e9), hyp_st.floats(0.0, 1e9),
+       hyp_st.floats(0.0, 1.0))
+def test_adapt_ratio_always_within_starvation_bounds(r0, ld, pd, sat):
+    r = float(adapt_ratio(r0, ld, pd, saturation=sat, r_idle=0.25))
+    assert RATIO_MIN <= r <= RATIO_MAX
+
+
+def test_adapt_ratio_direction_and_idle_attractor():
+    # saturated + page-dominated demand -> ratio sheds toward the floor
+    r = 0.25
+    for _ in range(60):
+        r = float(adapt_ratio(r, 100.0, 10000.0, saturation=1.0,
+                              r_idle=0.25))
+    assert r == pytest.approx(max(100.0 / 10100.0, RATIO_MIN), abs=0.02)
+    # saturated + line-dominated demand -> ratio grows
+    r = 0.25
+    for _ in range(60):
+        r = float(adapt_ratio(r, 10000.0, 100.0, saturation=1.0,
+                              r_idle=0.25))
+    assert r > 0.7
+    # idle -> returns to the seed no matter where it starts
+    r = RATIO_MAX
+    for _ in range(60):
+        r = float(adapt_ratio(r, 0.0, 0.0, saturation=0.0, r_idle=0.25))
+    assert r == pytest.approx(0.25, abs=1e-3)
+
+
+def test_adaptive_scheme_never_starves_either_channel():
+    """Sustained mixed load under a degraded bursty link: the adaptive
+    scheme still moves BOTH granularities and every adapted ratio stays
+    inside the starvation clamp."""
+    w = WORKLOADS["bc"]
+    tr = generate_trace(w, 4000, seed=5)
+    horizon = float(np.sum(tr.gap)) * 2.0
+    net = make_net(NetworkParams(), num_mc=2,
+                   schedule=make_link_schedule("burst", horizon, 2))
+    fin = run_trace(SCHEMES["daemon-adaptive"], SimConfig(num_mc=2), tr,
+                    net, w.comp_ratio)
+    assert float(fin.stats["lines_moved"]) > 0
+    assert float(fin.stats["pages_moved"]) > 0
+    ratios = np.concatenate([np.asarray(fin.net.ratio),
+                             np.asarray(fin.mem.ratio)])
+    assert (ratios >= RATIO_MIN - 1e-6).all()
+    assert (ratios <= RATIO_MAX + 1e-6).all()
+    # both planes actually drained wire bytes on every module
+    assert (np.asarray(fin.net.line_bytes) > 0).all()
+    assert (np.asarray(fin.net.page_bytes) > 0).all()
+
+
+def test_static_scheme_ratio_state_never_moves():
+    w = WORKLOADS["bc"]
+    tr = generate_trace(w, 1000, seed=5)
+    net = make_net(NetworkParams(), num_mc=2,
+                   schedule=make_link_schedule("burst", 1e5, 2))
+    fin = run_trace(with_ratio(SCHEMES["daemon"], 0.4),
+                    SimConfig(num_mc=2), tr, net, WORKLOADS["bc"].comp_ratio)
+    np.testing.assert_allclose(np.asarray(fin.net.ratio), 0.4)
+    np.testing.assert_allclose(np.asarray(fin.mem.ratio), 0.4)
+
+
+# -------------------------------- conservation under time-varying links
+@pytest.mark.parametrize("profile", ("burst", "degrade", "flap"))
+def test_desim_byte_conservation_under_time_varying_link(profile):
+    """Bandwidth schedules change WHEN bytes move, never HOW MANY: the
+    per-module fabric ledgers must still sum to the stats ledger."""
+    w = WORKLOADS["pr"]
+    tr = generate_trace(w, 1500, seed=7)
+    horizon = float(np.sum(tr.gap)) * 2.0
+    net = make_net(NetworkParams(), num_mc=4,
+                   schedule=make_link_schedule(profile, horizon, 4))
+    for scheme in ("daemon", "daemon-adaptive"):
+        fin = run_trace(SCHEMES[scheme], SimConfig(num_mc=4), tr, net,
+                        w.comp_ratio)
+        np.testing.assert_allclose(float(fabric.total_bytes(fin.net)),
+                                   float(fin.stats["net_bytes"]),
+                                   rtol=1e-5)
+
+
+def test_store_byte_conservation_under_time_varying_link():
+    cfg = KVStoreConfig(num_local_pages=4, page_tokens=8, kv_heads=2,
+                        head_dim=16, page_budget_per_step=2,
+                        adaptive_ratio=True,
+                        fabric=FabricConfig(num_modules=2))
+    t, m, h = make_link_schedule("burst", 30.0, 2, knots=8)
+    link = fabric.LinkModel(
+        bw=jnp.full((2,), link_bytes_per_step(cfg), jnp.float32),
+        sched_t=jnp.asarray(t), sched_mult=jnp.asarray(m),
+        health=jnp.asarray(h))
+    state = init_kv_store_batch(cfg, 3, link=link)
+    remote = jnp.zeros((24, 8, 2, 16), jnp.float32)
+    rng = np.random.default_rng(2)
+    fetch = jax.jit(lambda s, need, off: step_fetch_batch(
+        s, cfg, remote, remote, need, off))
+    for _ in range(20):
+        need = jnp.asarray(rng.integers(0, 24, size=(3, 3)), jnp.int32)
+        offs = jnp.asarray(rng.integers(0, 64, size=(3, 3)), jnp.int32)
+        state, *_ = fetch(state, need, offs)
+    led = ledger(state)
+    assert led["wire_bytes"] > 0
+    np.testing.assert_allclose(float(fabric.total_bytes(state.fab)),
+                               led["wire_bytes"], rtol=1e-5)
+
+
+# ------------------------------------------------- store on scheduled links
+def test_store_degraded_link_delays_landings():
+    """The same request stream lands pages later on a link whose schedule
+    collapses bandwidth — time-variability routes through the fabric's
+    real channel service, not a fixed per-page cost."""
+    cfg = KVStoreConfig(num_local_pages=4, page_tokens=8, kv_heads=2,
+                        head_dim=16, page_budget_per_step=4)
+    bw = link_bytes_per_step(cfg)
+    slow = LinkModel(bw=jnp.asarray([bw], jnp.float32),
+                     sched_t=jnp.asarray([0.0], jnp.float32),
+                     sched_mult=jnp.asarray([[0.1]], jnp.float32),
+                     health=jnp.asarray([[1.0]], jnp.float32))
+    remote = jnp.zeros((8, 8, 2, 16), jnp.float32)
+    need = jnp.asarray([5, 6], jnp.int32)
+
+    def steps_until_hit(link):
+        state = init_kv_store(cfg, link=link)
+        for k in range(12 * page_cost_steps(cfg)):
+            state, _, _, hit = step_fetch(state, cfg, remote, remote, need)
+            if bool(hit.all()):
+                return k
+        return 10 ** 9
+
+    fast = steps_until_hit(None)                  # constant default link
+    degraded = steps_until_hit(slow)              # 10% bandwidth
+    assert fast < degraded
+
+
+def test_store_adaptive_ratio_is_carried_state():
+    def run(adaptive):
+        cfg = KVStoreConfig(num_local_pages=4, page_tokens=8, kv_heads=2,
+                            head_dim=16, page_budget_per_step=1,
+                            adaptive_ratio=adaptive,
+                            fabric=FabricConfig(num_modules=2))
+        state = init_kv_store_batch(cfg, 2)
+        remote = jnp.zeros((16, 8, 2, 16), jnp.float32)
+        rng = np.random.default_rng(0)
+        for _ in range(10):
+            need = jnp.asarray(rng.integers(0, 16, size=(2, 3)), jnp.int32)
+            state, *_ = step_fetch_batch(state, cfg, remote, remote, need)
+        return np.asarray(state.fab.ratio)
+
+    static = run(False)
+    np.testing.assert_allclose(static, 0.25)      # seed never moves
+    adapted = run(True)
+    assert (np.abs(adapted - 0.25) > 1e-4).any()  # controller engaged
+    assert (adapted >= RATIO_MIN).all() and (adapted <= RATIO_MAX).all()
+
+
+# ----------------------------------------------------- link-health faults
+def test_link_health_monitor_flags_flapping_module():
+    mon = LinkHealthMonitor(floor=0.5, patience=3)
+    healthy = np.ones(4, np.float32)
+    for _ in range(20):
+        assert mon.observe(healthy) == []
+    flap = healthy.copy()
+    flap[2] = 0.05
+    advised = []
+    for _ in range(3):
+        advised = mon.observe(flap)
+    assert advised == [2]
+    assert mon.flagged == [2]
+    # recovery clears the advisory
+    for _ in range(3):
+        mon.observe(healthy)
+    assert mon.flagged == []
+
+
+def test_link_health_monitor_reads_fabric_schedule():
+    t, m, h = make_link_schedule("flap", 100.0, 4, knots=10)
+    link = LinkModel(bw=jnp.ones((4,), jnp.float32),
+                     sched_t=jnp.asarray(t), sched_mult=jnp.asarray(m),
+                     health=jnp.asarray(h))
+    mon = LinkHealthMonitor(floor=0.5, patience=2)
+    flagged = set()
+    for step in range(100):
+        flagged.update(mon.observe(
+            np.asarray(fabric.module_health(link, float(step)))))
+    assert flagged == {LINK_PROFILES["flap"].fail_module}

@@ -83,13 +83,13 @@ def test_simulate_grid_is_a_lattice_slice():
 
 # --------------------------------------------------------- compile counts
 def test_single_compile_for_full_scheme_lattice():
-    """9 schemes x 3 networks adds exactly ONE jit trace; re-running with
+    """10 schemes x 3 networks adds exactly ONE jit trace; re-running with
     different bw ratios / comp ratios (same shapes) adds none."""
     w = WORKLOADS["bc"]
     tr = generate_trace(w, 800, seed=5)
     nets = _nets([(100.0, 2.0), (100.0, 4.0), (400.0, 8.0)])
     all_schemes = [SCHEMES[s] for s in SCHEMES]
-    assert len(all_schemes) == 9
+    assert len(all_schemes) == 10   # includes daemon-adaptive
     before = lattice_cache_size()
     simulate_lattice(all_schemes, SimConfig(), tr, nets, w.comp_ratio)
     assert lattice_cache_size() - before == 1
