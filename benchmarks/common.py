@@ -12,8 +12,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.daemon_store import (init_kv_store_batch, ledger,
-                                     step_fetch_batch)
+from repro.core.daemon_store import (init_kv_store_batch,
+                                     init_kv_store_replicated, ledger,
+                                     step_fetch_batch,
+                                     step_fetch_replicated)
 from repro.core.params import NetworkParams
 from repro.sim.desim import SimConfig, make_net, simulate_lattice
 from repro.sim.schemes import SCHEMES, with_ratio
@@ -52,52 +54,113 @@ def _store_lag(state, clock):
     return jnp.maximum(jnp.max(busy) - clock, 0.0)
 
 
-def run_store_warmed(cfg, pages, offs, n_remote, *, link=None,
-                     track_lag=False) -> dict:
-    """Drive a batched DaemonKVStore over (steps, B, W) request streams
-    with desim-style warmup gating — the ONE store-run harness both
-    `benchmarks/serving.py` and `benchmarks/robustness.py` report from
-    (a private copy in either would let their warmup/ledger-delta
-    semantics drift apart).
+def _warmed_run(state, steps, *, fetch, lag, track_lag) -> dict:
+    """Shared warm-gated store driver: the warm phase (`WARM_FRAC`, incl.
+    compile) runs untimed and the ledger + state are snapshotted at the
+    boundary so callers can delta-gate hit/request stats; the timed phase
+    optionally accumulates the movement-plane lag as a device scalar so
+    the loop stays async (no per-step host sync skewing wall_s).
 
-    Warm phase (`WARM_FRAC`, incl. compile) runs untimed; the ledger is
-    snapshotted at the boundary so callers can delta-gate hit/request
-    stats. With `track_lag`, each timed step also records how far the
-    busiest channel's committed service extends past the decode clock
-    (the movement-plane lag the robustness sweep integrates) — the lag
-    accumulates as a device scalar, so the timed loop stays async (no
-    per-step host sync skewing wall_s).
-
-    The jitted step is a module-level function with `cfg` static, so
-    sweeps over link profiles / request streams reuse one compile per
-    store config. Returns {state, steps, warm, led_warm, led,
-    stall_warm, wall_s, lag_sum}.
+    This is the ONE warmup/timing/ledger-delta core behind
+    `run_store_warmed` (BENCH_serve/BENCH_robust) and
+    `run_replicated_warmed` (BENCH_scale) — a private copy in any sweep
+    would let their warmup semantics drift apart and make the JSONs
+    incomparable. `fetch(state, t)` serves step t; `lag(state, clock)`
+    measures committed service past the decode clock.
     """
-    steps, batch = pages.shape[0], pages.shape[1]
     warm = max(1, int(steps * WARM_FRAC))
-    remote = jnp.zeros((n_remote, cfg.page_tokens, cfg.kv_heads,
-                        cfg.head_dim), jnp.bfloat16)
-    state = init_kv_store_batch(cfg, batch, link=link)
     for t in range(warm):
-        state, *_ = _store_fetch(cfg, state, remote,
-                                 jnp.asarray(pages[t]),
-                                 jnp.asarray(offs[t]))
+        state = fetch(state, t)
     jax.block_until_ready(state.fab.page_busy)
-    led_warm = ledger(state)
-    stall_warm = np.asarray(state.seqs.stats["stall_steps"])
+    warm_state = state
     t0 = time.time()
     lag_acc = jnp.zeros((), jnp.float32)
     for t in range(warm, steps):
+        state = fetch(state, t)
+        if track_lag:
+            lag_acc = lag_acc + lag(state, jnp.float32(t + 1))
+    jax.block_until_ready(state.fab.page_busy)
+    return {"state": state, "steps": steps, "warm": warm,
+            "warm_state": warm_state, "led_warm": ledger(warm_state),
+            "led": ledger(state),
+            "wall_s": time.time() - t0, "lag_sum": float(lag_acc)}
+
+
+def run_store_warmed(cfg, pages, offs, n_remote, *, link=None,
+                     track_lag=False) -> dict:
+    """Drive a batched DaemonKVStore over (steps, B, W) request streams
+    with desim-style warmup gating (`_warmed_run`) — what
+    `benchmarks/serving.py` and `benchmarks/robustness.py` report from.
+
+    The jitted step is a module-level function with `cfg` static, so
+    sweeps over link profiles / request streams reuse one compile per
+    store config. Returns the `_warmed_run` dict plus `stall_warm` (the
+    per-sequence stall snapshot at the warm boundary).
+    """
+    remote = jnp.zeros((n_remote, cfg.page_tokens, cfg.kv_heads,
+                        cfg.head_dim), jnp.bfloat16)
+    state = init_kv_store_batch(cfg, pages.shape[1], link=link)
+
+    def fetch(state, t):
         state, *_ = _store_fetch(cfg, state, remote,
                                  jnp.asarray(pages[t]),
                                  jnp.asarray(offs[t]))
-        if track_lag:
-            lag_acc = lag_acc + _store_lag(state, jnp.float32(t + 1))
-    jax.block_until_ready(state.fab.page_busy)
-    return {"state": state, "steps": steps, "warm": warm,
-            "led_warm": led_warm, "led": ledger(state),
-            "stall_warm": stall_warm,
-            "wall_s": time.time() - t0, "lag_sum": float(lag_acc)}
+        return state
+
+    out = _warmed_run(state, pages.shape[0], fetch=fetch, lag=_store_lag,
+                      track_lag=track_lag)
+    out["stall_warm"] = np.asarray(
+        out["warm_state"].seqs.stats["stall_steps"])
+    return out
+
+
+@partial(jax.jit, static_argnums=0)
+def _repl_fetch(cfg, state, remote, need, off, wr):
+    return step_fetch_replicated(state, cfg, remote, remote, need, off, wr)
+
+
+@jax.jit
+def _repl_lag(state, clock):
+    # committed service past the decode clock on EITHER endpoint: the
+    # shared module banks or the busiest replica's NIC bank — every
+    # channel class including writebacks (the scaling streams write
+    # every step, so writeback congestion is real service time)
+    def horizon(bank):
+        return jnp.maximum(jnp.maximum(jnp.max(bank.line_busy),
+                                       jnp.max(bank.page_busy)),
+                           jnp.max(bank.wb_busy))
+    busy = jnp.maximum(horizon(state.fab), horizon(state.nic))
+    return jnp.maximum(busy - clock, 0.0)
+
+
+def run_replicated_warmed(cfg, num_replicas, pages, offs, writes,
+                          n_remote, *, link=None) -> dict:
+    """Drive a replicated DaemonKVStore (C replicas x B tenants, one
+    shared memory-side fabric + per-replica NIC banks) over
+    (steps, C, B, W) request streams on the same `_warmed_run` core as
+    `run_store_warmed` — the compute-plane sibling of that harness,
+    reported from by `benchmarks/scaling.py` (BENCH_scale.json).
+
+    Always tracks the movement-plane lag (the scaling sweep's service
+    metric): per timed step, how far the busiest channel's committed
+    service — shared module banks OR per-replica NIC banks, writeback
+    channels included — extends past the decode clock.
+    """
+    assert pages.shape[1] == num_replicas
+    remote = jnp.zeros((n_remote, cfg.page_tokens, cfg.kv_heads,
+                        cfg.head_dim), jnp.bfloat16)
+    state = init_kv_store_replicated(cfg, num_replicas, pages.shape[2],
+                                     link=link)
+
+    def fetch(state, t):
+        state, *_ = _repl_fetch(cfg, state, remote,
+                                jnp.asarray(pages[t]),
+                                jnp.asarray(offs[t]),
+                                jnp.asarray(writes[t]))
+        return state
+
+    return _warmed_run(state, pages.shape[0], fetch=fetch, lag=_repl_lag,
+                       track_lag=True)
 
 
 def get_trace(wl: str, r: int = None, seed: int = 1) -> Trace:

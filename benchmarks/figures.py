@@ -10,8 +10,11 @@ Figure -> experiment map (paper section in parens):
   fig13 (§6)   network disturbance during runtime
   fig15 (§6)   multithreaded (8-core) executions
   fig16 (§6)   FIFO replacement policy in local memory
-  fig17/22 (§6) multiple memory components
+  fig17 (§6)   multiple memory components
   fig18 (§6)   multiple concurrent workloads (4-core CC)
+  fig22 (§6)   multiple compute components (the compute-plane lattice:
+               schemes x active-unit counts in one compiled program,
+               `benchmarks/scaling.py` is the full sweep)
   fig20 (A.2)  switch latency sweep (to 1000ns)
   fig21 (A.3)  bandwidth factor sweep (to 1/16)
 """
@@ -299,6 +302,33 @@ def fig17_multi_mc(r=None):
                "daemon_vs_local"], rows)
     print(f"# geomean daemon vs remote: {round(geomean(spds), 3)}")
     return {"rows": rows, "agg": geomean(spds)}
+
+
+def fig22_compute_scaling(r=None, quick=False, desim=None):
+    """Multiple compute components: C units sharding one trace over a
+    shared footprint, contending on the shared module channels with
+    per-unit NIC ingress (two-leg pricing). The whole scheme x C grid is
+    ONE `simulate_lattice` call per (workload, M) — the active unit
+    count rides the lattice's compute axis as data
+    (`benchmarks/scaling.py:desim_scaling`, which this wraps). `desim`
+    accepts a precomputed `desim_scaling` result so a run that also
+    executes the `scale` sweep prices the lattice once (the fig9-style
+    grid reuse)."""
+    from benchmarks.scaling import C_SWEEP, desim_scaling
+    out = desim if desim is not None else desim_scaling(quick=quick, r=r)
+    # fig-22 style aggregate: geomean daemon speedup over remote per C
+    spds = {c: [] for c in C_SWEEP}
+    for wl, per_m in out.items():
+        for mname, per in per_m.items():
+            for c in C_SWEEP:
+                spds[c].append(per["remote"]["total_time_ns"][str(c)]
+                               / per["daemon"]["total_time_ns"][str(c)])
+    rows = [[c, round(geomean(spds[c]), 3)] for c in C_SWEEP]
+    csv_print("fig22 multiple compute components (daemon vs remote at "
+              "equal C; paper: wins hold across compute components)",
+              ["C", "daemon_vs_remote_geomean"], rows)
+    return {"rows": rows, "desim": out,
+            "agg": {c: geomean(spds[c]) for c in C_SWEEP}}
 
 
 def fig18_multi_workload(r=None):

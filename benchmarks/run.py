@@ -3,10 +3,12 @@
 Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig8,...]
 Emits CSV blocks per figure and the paper-claim validation summary, plus
 `BENCH_serve.json` (machine-readable batched-store serving metrics:
-tokens/s, wire bytes, hit ratio) when the `serve` sweep runs and
+tokens/s, wire bytes, hit ratio) when the `serve` sweep runs,
 `BENCH_robust.json` (adaptive-vs-static repartitioning under time-varying
-link profiles, sim + store planes) when the `robust` sweep runs.
-Trace length via REPRO_BENCH_R (default 60000).
+link profiles, sim + store planes) when the `robust` sweep runs, and
+`BENCH_scale.json` (compute-plane scaling: desim total time and
+replicated-store tokens/s vs C compute units x M modules) when the
+`scale` sweep runs. Trace length via REPRO_BENCH_R (default 60000).
 """
 from __future__ import annotations
 
@@ -17,12 +19,13 @@ from pathlib import Path
 
 import numpy as np
 
-from benchmarks import figures, robustness, roofline, serving
+from benchmarks import figures, robustness, roofline, scaling, serving
 from benchmarks.common import ORDER
 from benchmarks.validate import check
 
 BENCH_SERVE_JSON = Path("BENCH_serve.json")
 BENCH_ROBUST_JSON = Path("BENCH_robust.json")
+BENCH_SCALE_JSON = Path("BENCH_scale.json")
 
 
 def main() -> None:
@@ -78,6 +81,10 @@ def main() -> None:
         figures.fig16_fifo(r)
     if want("fig17"):
         figures.fig17_multi_mc(r)
+    f22 = None
+    if want("fig22"):
+        f22 = figures.fig22_compute_scaling(r, quick=args.quick)
+        values["daemon_vs_remote_c8"] = f22["agg"][8]
     if want("fig18"):
         figures.fig18_multi_workload(r)
     if want("fig20"):
@@ -98,6 +105,15 @@ def main() -> None:
         print(f"# BENCH_robust.json written: adaptive-vs-best-static "
               f"desim {hl['desim_best_win']:.3f}x, "
               f"store {hl['store_best_win']:.3f}x")
+    if want("scale"):
+        sc = scaling.scale_sweep(quick=args.quick,
+                                 desim=f22["desim"] if f22 else None)
+        BENCH_SCALE_JSON.write_text(json.dumps(sc, indent=2) + "\n")
+        hl = sc["headline"]
+        print(f"# BENCH_scale.json written: store tokens/s C8-vs-C1 "
+              f"daemon {hl['daemon_speedup_c_max']:.2f}x, remote "
+              f"{hl['remote_speedup_c_max']:.2f}x "
+              f"(gap {hl['scaling_gap']:.2f}x)")
     if want("roofline"):
         roofline.main()
 

@@ -19,6 +19,9 @@ CLAIMS = [
     ("daemon_bw4", 2.36, 1.3, 3.4),
     ("daemon_bw8", 2.97, 1.6, 4.4),
     ("ratio25_beats_50", 1.02, 0.98, 1.6),
+    # figs 17/22: daemon holds its win over remote as compute/memory
+    # components scale (paper: 3.25x across the MC configs)
+    ("daemon_vs_remote_c8", 3.25, 1.2, 5.0),
     ("lz_vs_fpcbdi", 1.54, 1.1, 2.2),
     ("lz_vs_fve", 1.44, 1.05, 2.1),
 ]

@@ -35,7 +35,7 @@ from repro.runtime.fault import LinkHealthMonitor
 from repro.sim.workloads import make_link_schedule
 from repro.models.model import ModelOptions, init_model
 from repro.runtime.serve_loop import (PagedServeConfig, ServeConfig,
-                                      serve_batch_paged)
+                                      serve_batch_paged, serve_replicated)
 
 BATCH = 4
 MODULES = 4
@@ -117,6 +117,35 @@ def main():
     saving = 1 - daemon["wire_bytes"] / remote["wire_bytes"]
     print(f"  => DaeMon moves {saving*100:.1f}% fewer wire bytes at equal "
           "service (compressed page plane + critical sub-blocks)")
+
+    print("\n== replicated serving: C=2 replicas contending on ONE hot "
+          "module ==")
+    # one memory module = every replica's page migrations queue on the
+    # same channel; each replica still owns its NIC bank, so the ledger
+    # separates per-module (shared) from per-unit (replicated) bytes
+    cfg2 = get_config("qwen3-1.7b").reduced()
+    params2, _ = init_model(jax.random.PRNGKey(2), cfg2)
+    prompts2 = jax.random.randint(jax.random.PRNGKey(3), (2, 4), 2, 200,
+                                  jnp.int32)
+    # small pool + short pages: the decode's KV-append window outgrows
+    # the pool, so locally-written pages get evicted and pay writebacks
+    rep_cfg = KVStoreConfig(
+        num_local_pages=4, page_tokens=2, kv_heads=2, head_dim=32,
+        page_budget_per_step=2,
+        fabric=FabricConfig(num_modules=1))      # the hot shared module
+    toks, led = serve_replicated(params2, cfg2, prompts2,
+                                 ServeConfig(max_new_tokens=10), rep_cfg,
+                                 num_replicas=2,
+                                 pcfg=PagedServeConfig(window_pages=2,
+                                                       pages_per_seq=8))
+    hr = led["local_hits"] / max(led["requests"], 1)
+    print(f"  tokens: {toks.shape} (C, B, P+new)")
+    print(f"  wire={led['wire_bytes']/1e3:.1f}KB "
+          f"writebacks={led['writeback_bytes']/1e3:.1f}KB hit={hr:.2f}")
+    print(f"  shared module KB: "
+          f"{'/'.join(f'{b/1e3:.1f}' for b in led['module_bytes'])}  "
+          f"per-replica NIC KB: "
+          f"{'/'.join(f'{b/1e3:.1f}' for b in led['unit_bytes'])}")
 
 
 if __name__ == "__main__":

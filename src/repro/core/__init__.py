@@ -7,6 +7,10 @@
 # fabric.py       multi-module movement fabric: per-module channel banks,
 #                 time-varying LinkModel (bandwidth schedules + health),
 #                 page->module placement, per-module wire-byte ledgers
+# compute_plane.py compute-side substrate: per-unit state helpers
+#                 (engines/tables on a leading (C,) axis), request->unit
+#                 sharding, per-unit NIC channel banks, and two-leg
+#                 (shared module + requesting unit's NIC) service pricing
 # compression.py  §4.4 link compression, TPU-adapted (int8/int4 blocks, BDI)
 # daemon_store.py two-tier paged KV store for serving (sub-block critical
 #                 plane + compressed page plane + adaptive selection),
@@ -23,6 +27,11 @@ from repro.core.fabric import (PLACEMENTS, FabricConfig, FabricState,
                                module_health, place, sample_link,
                                scheduled_link, serve_dual_at,
                                serve_writeback_at, total_bytes)
+from repro.core.compute_plane import (ComputePlaneConfig, init_nic_bank,
+                                      nic_link_for, replicate,
+                                      serve_dual_two_leg,
+                                      serve_writeback_two_leg, shard_unit,
+                                      unit_bytes, unit_slice, unit_update)
 from repro.core.compression import (dequantize_block_int4,
                                     dequantize_block_int8, ef_compress,
                                     quantize_block_int4,

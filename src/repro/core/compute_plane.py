@@ -1,0 +1,220 @@
+"""Compute plane: per-compute-unit engines, tables, and NIC channel banks.
+
+The paper's scalability claim (§5, figs 17/22) is symmetric: per-unit
+DaeMon engines span multiple *memory* components AND multiple *compute*
+components. The memory axis is `repro.core.fabric` (per-module channel
+banks); this module is the compute axis — the substrate for C compute
+units contending on one shared memory pool, the defining workload of real
+disaggregated racks (multi-client contention in the Maruf & Chowdhury /
+Ewais & Chow surveys).
+
+What a compute unit owns (replicated, never shared):
+
+  * its engines     — an `EngineState` (inflight page + sub-block CAMs)
+                      per unit: `replicate` / `unit_slice` / `unit_update`
+                      are the canonical way to carry per-unit pytrees with
+                      a leading (C,) axis and address one unit by a
+                      *traced* id inside jitted code;
+  * its local memory — the per-unit page table / pool (desim's set-assoc
+                      table, the store's `SeqState` pool) — callers carry
+                      these on the same leading axis;
+  * its NIC         — a compute-side channel bank: line / page / writeback
+                      busy-until clocks per unit. The NIC bank IS a
+                      `fabric.FabricState` whose index axis is the compute
+                      unit instead of the memory module, so all channel
+                      arithmetic still delegates to `bandwidth.serve_dual`
+                      / `occupy_busy` through `fabric.serve_dual_at` —
+                      nothing here re-implements busy-until math.
+
+What stays shared: the memory-side fabric (module channel banks + link
+model + placement) — that is the contention point C units meet at.
+
+**Two-leg service.** Every transfer is priced on two endpoints: the shared
+memory module's channel bank (the existing `fabric.serve_dual_at` leg)
+and the requesting unit's NIC bank, both sampled from the same
+piecewise-constant `LinkModel` semantics; the transfer's arrival is the
+LATER of the two completions (`serve_dual_two_leg`). The NIC leg is
+`where`-gated on a *traced* `active` flag (true iff more than one unit is
+active), so:
+
+  * C = 1 keeps the NIC banks idle (busy clocks and byte ledgers pinned
+    at zero) and the combined arrival IS the module-side completion —
+    bit-identical to the pre-compute-plane path (the seed golden capture
+    still pins the whole lattice);
+  * the active unit count is DATA, not shape: `SimConfig.num_cu` (and the
+    replica count in the store) is a static envelope, while the number of
+    units actually receiving requests rides a lattice axis exactly like
+    the link-profile knots — schemes x nets x C is ONE compiled program.
+
+Byte accounting is two-endpoint by construction: the gated bytes accrue
+on the module ledger (inside `serve_dual_at`) AND on the unit's NIC
+ledger when active, so "per-unit NIC bytes sum == per-module bytes sum ==
+caller totals" is a checkable invariant whenever C > 1
+(`tests/test_compute_plane.py`).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fabric
+from repro.core.fabric import FabricState, LinkModel
+
+F32 = jnp.float32
+
+# Knuth multiplicative mix for request->unit sharding. Deliberately folded
+# with a DIFFERENT shift than fabric.place's hash placement so unit choice
+# decorrelates from module choice (a unit should fan out over modules).
+_SHARD_MULT = jnp.int32(-1640531527)
+_SHARD_SHIFT = 16
+
+
+@dataclass(frozen=True)
+class ComputePlaneConfig:
+    """Static compute-plane shape: the unit-count envelope.
+
+    `num_units` sizes every per-unit array (engines, tables, NIC banks);
+    how many of those units actually receive traffic is traced data (the
+    `active_units` argument of `shard_unit` / the `active` gate of the
+    two-leg service), so one envelope compiles once and serves every
+    C <= num_units lattice point.
+    """
+    num_units: int = 1
+
+    def __post_init__(self):
+        if self.num_units < 1:
+            raise ValueError("num_units must be >= 1")
+
+    def nic_config(self) -> fabric.FabricConfig:
+        """The NIC bank's fabric shape: one 'module' per compute unit."""
+        return fabric.FabricConfig(num_modules=self.num_units)
+
+
+# ------------------------------------------------------- per-unit pytrees
+def replicate(tree, num_units: int):
+    """Stack a per-unit state pytree C times along a new leading axis."""
+    return jax.tree.map(lambda x: jnp.stack([x] * num_units), tree)
+
+
+def unit_slice(tree, cu):
+    """One unit's slice of a (C, ...)-leading pytree (traced `cu` ok)."""
+    return jax.tree.map(lambda a: a[cu], tree)
+
+
+def unit_update(tree, cu, new):
+    """Scatter one unit's updated slice back into the (C, ...) pytree."""
+    return jax.tree.map(lambda a, n: a.at[cu].set(n), tree, new)
+
+
+# ------------------------------------------------------------- sharding
+def shard_unit(page_id, active_units) -> jnp.ndarray:
+    """Request -> compute unit (traceable int32 in [0, active_units)).
+
+    Traces shard into per-unit request streams over a SHARED footprint by
+    hashing the page id: one page's burst stays on one unit (bursts keep
+    their locality structure), the page space partitions ~evenly across
+    the active units, and every unit still fans out over all memory
+    modules (different fold than `fabric.place`'s hash). `active_units`
+    is traced data — `active_units == 1` routes everything to unit 0,
+    which is exactly the seed's single-compute-unit behavior.
+    """
+    page_id = jnp.asarray(page_id, jnp.int32)
+    mixed = (page_id * _SHARD_MULT) & jnp.int32(0x7FFFFFFF)
+    return (mixed >> _SHARD_SHIFT) % jnp.asarray(active_units, jnp.int32)
+
+
+# ------------------------------------------------------------- NIC banks
+def nic_link_for(mem_link: LinkModel, num_units: int) -> LinkModel:
+    """Per-unit NIC link derived from the memory-side LinkModel.
+
+    Each unit's NIC serializes at the network's mean per-module bandwidth
+    and breathes with the same schedule (the ambient contention multiplier,
+    averaged across modules — a network-wide burst throttles compute-side
+    ingress too). Health stays 1: module link failures are module-side
+    events, they do not kill a unit's NIC.
+    """
+    m_bw = jnp.mean(mem_link.bw)
+    k = mem_link.sched_t.shape[0]
+    mult = jnp.broadcast_to(
+        jnp.mean(mem_link.sched_mult, axis=1, keepdims=True),
+        (k, num_units))
+    return LinkModel(
+        bw=jnp.broadcast_to(m_bw, (num_units,)),
+        sched_t=mem_link.sched_t,
+        sched_mult=mult,
+        health=jnp.ones((k, num_units), F32))
+
+
+def init_nic_bank(num_units: int, link: LinkModel = None,
+                  ratio=0.25) -> FabricState:
+    """Fresh per-unit NIC channel bank (a FabricState indexed by unit)."""
+    cfg = fabric.FabricConfig(num_modules=num_units)
+    if link is None:
+        link = fabric.constant_link(1.0, num_units)
+    return fabric.init_fabric(cfg, link=link, ratio=ratio)
+
+
+# ---------------------------------------------------------- two-leg service
+def serve_dual_two_leg(mem: FabricState, nic: FabricState, mc, cu, *,
+                       partition, now,
+                       line_ready, line_bytes, line_gate,
+                       page_ready, page_bytes, page_gate, active=True
+                       ) -> Tuple[FabricState, FabricState,
+                                  jnp.ndarray, jnp.ndarray,
+                                  jnp.ndarray, jnp.ndarray]:
+    """One dual-granularity service step priced on BOTH endpoints.
+
+    Leg 1: module `mc`'s bank on the shared memory-side fabric (existing
+    `fabric.serve_dual_at` — module contention across all units).
+    Leg 2: unit `cu`'s NIC bank, same ready times and bytes, at the NIC
+    link bandwidth (compute-side ingress serialization).
+
+    The combined completion is the LATER of the two legs; both legs'
+    byte ledgers accrue the gated bytes. `active` (traced) gates the NIC
+    leg entirely: inactive => NIC clocks/ledgers untouched and the
+    combined times equal the module leg's — the C=1 bit-identity path.
+
+    Returns (mem', nic', line_done, page_done, line_done_mod,
+    page_done_mod); the `_mod` times are the module-leg completions,
+    which callers needing transmission-start semantics (desim's
+    `pn_start` race rule) derive start times from.
+    """
+    active = jnp.asarray(active, bool)
+    mem, l_mod, p_mod = fabric.serve_dual_at(
+        mem, mc, partition=partition, now=now,
+        line_ready=line_ready, line_bytes=line_bytes, line_gate=line_gate,
+        page_ready=page_ready, page_bytes=page_bytes, page_gate=page_gate)
+    nic, l_nic, p_nic = fabric.serve_dual_at(
+        nic, cu, partition=partition, now=now,
+        line_ready=line_ready, line_bytes=line_bytes,
+        line_gate=line_gate & active,
+        page_ready=page_ready, page_bytes=page_bytes,
+        page_gate=page_gate & active)
+    line_done = jnp.where(active, jnp.maximum(l_mod, l_nic), l_mod)
+    page_done = jnp.where(active, jnp.maximum(p_mod, p_nic), p_mod)
+    return mem, nic, line_done, page_done, l_mod, p_mod
+
+
+def serve_writeback_two_leg(mem: FabricState, nic: FabricState, mc, cu,
+                            t_ready, nbytes, *, gate, active=True,
+                            now=None
+                            ) -> Tuple[FabricState, FabricState,
+                                       jnp.ndarray]:
+    """Eviction writeback priced on the module's reverse channel AND the
+    evicting unit's NIC writeback channel (later completion wins); the
+    NIC leg is gated like `serve_dual_two_leg`."""
+    active = jnp.asarray(active, bool)
+    mem, done_mod = fabric.serve_writeback_at(mem, mc, t_ready, nbytes,
+                                              gate=gate, now=now)
+    nic, done_nic = fabric.serve_writeback_at(nic, cu, t_ready, nbytes,
+                                              gate=gate & active, now=now)
+    done = jnp.where(active, jnp.maximum(done_mod, done_nic), done_mod)
+    return mem, nic, done
+
+
+def unit_bytes(nic: FabricState) -> jnp.ndarray:
+    """(C,) total wire bytes each unit's NIC carried (all channels)."""
+    return nic.line_bytes + nic.page_bytes + nic.wb_bytes

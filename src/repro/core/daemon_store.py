@@ -43,6 +43,31 @@ across the batch, then scheduling folds over the batch in sequence order
 so all B engines contend for the same per-module channels
 deterministically. ``step_fetch`` is the single-sequence wrapper.
 
+Replicated serving (the compute plane, ``repro.core.compute_plane``):
+``step_fetch_replicated`` carries C serving replicas x B tenants each —
+C*B sequences — against ONE memory-side fabric plus a per-replica NIC
+channel bank: every transfer is priced on two legs (the shared module's
+channel AND the owning replica's NIC, arrival = the later completion),
+so replicas contend on the shared pool while their own ingress
+serializes independently. Per-unit wire bytes accrue on the NIC bank's
+ledgers (``ledger()`` reports them as ``unit_bytes``). A C=1 replica
+set keeps the NIC leg gated off and is exactly ``step_fetch_batch``.
+
+Writeback path (§4.3 serving side): locally *written* KV pages (marked
+via the steppers' ``needed_writes``) that get evicted from the local
+pool are routed through ``engine.note_dirty_eviction`` (dirty-unit
+buffering + throttle) and, when not buffered, serialized on the target
+module's writeback channel (``fabric.serve_writeback_at``) — the same
+wire accounting desim applies to its dirty evictions.
+``stats['writeback_bytes']`` tracks the wire cost; it is included in
+``wire_bytes`` so the byte-conservation invariant (fabric ledgers ==
+stats) keeps holding. One deliberate semantic difference from desim: a
+write whose page is NOT resident is a write-through — there is no local
+copy to dirty, the append lands in the remote tier directly, and the
+page fetched later is a clean remote copy (desim instead inserts its
+table entry at miss time and carries the triggering request's write
+flag into it). Only write HITS dirty the resident copy.
+
 All state is a pytree; both steppers are jit/scan-friendly. The byte
 ledger (`stats` + the fabric's per-module byte counters) is what
 examples/serve_paged.py reports against the Remote (page-only) baseline.
@@ -55,12 +80,12 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import bandwidth, fabric
+from repro.core import bandwidth, compute_plane, fabric
 from repro.core.engine import (EngineState, find, gate_tree as _gate_tree,
-                               init_engine_state, poll_arrivals,
-                               retire_arrivals, schedule_line,
-                               schedule_page, select_granularity,
-                               utilization)
+                               init_engine_state, note_dirty_eviction,
+                               poll_arrivals, retire_arrivals,
+                               schedule_line, schedule_page,
+                               select_granularity, utilization)
 from repro.core.fabric import FabricConfig, FabricState, LinkModel
 from repro.core.params import DaemonParams
 from repro.kernels import ops
@@ -93,6 +118,7 @@ class SeqState(NamedTuple):
     # local page table: remote page id resident in each slot (-1 empty)
     slot_page: jnp.ndarray        # (N,) int32
     slot_age: jnp.ndarray         # (N,) f32 (LRU clock)
+    slot_dirty: jnp.ndarray       # (N,) bool — locally written KV page
     # DaeMon movement plane (inflight page + sub-block CAMs, §4.2)
     eng: EngineState
     stats: dict
@@ -139,8 +165,32 @@ class BatchedKVStoreState(NamedTuple):
         return self.seqs.stats
 
 
+class ReplicatedKVStoreState(NamedTuple):
+    """C serving replicas x B tenants each: sequence leaves carry a
+    leading (C*B,) axis (replica-major — sequence i belongs to replica
+    i // B); `fab` is the ONE memory-side bank every replica contends
+    on; `nic` is the per-replica compute-side NIC bank (C units)."""
+    seqs: SeqState                # leaves have a leading (C*B,) axis
+    fab: FabricState              # shared memory-side bank (M modules)
+    nic: FabricState              # per-replica NIC banks (C units)
+    clock: jnp.ndarray
+
+    @property
+    def num_replicas(self) -> int:
+        return self.nic.line_busy.shape[0]
+
+    @property
+    def batch(self) -> int:
+        return self.seqs.slot_page.shape[0] // self.num_replicas
+
+    @property
+    def stats(self) -> dict:
+        return self.seqs.stats
+
+
 STAT_KEYS = ("sub_block_fetches", "page_moves", "wire_bytes",
-             "uncompressed_bytes", "local_hits", "requests", "stall_steps")
+             "uncompressed_bytes", "local_hits", "requests", "stall_steps",
+             "writeback_bytes", "dirty_evicts")
 
 
 def _init_seq(cfg: KVStoreConfig) -> SeqState:
@@ -151,6 +201,7 @@ def _init_seq(cfg: KVStoreConfig) -> SeqState:
         vpool=jnp.zeros(shape, jnp.bfloat16),
         slot_page=jnp.full((n,), -1, jnp.int32),
         slot_age=jnp.zeros((n,), F32),
+        slot_dirty=jnp.zeros((n,), bool),
         eng=init_engine_state(cfg.daemon),
         stats={k: jnp.zeros((), F32) for k in STAT_KEYS},
     )
@@ -182,10 +233,29 @@ def init_kv_store(cfg: KVStoreConfig, link: LinkModel = None
 
 def init_kv_store_batch(cfg: KVStoreConfig, batch: int,
                         link: LinkModel = None) -> BatchedKVStoreState:
-    seq = _init_seq(cfg)
-    seqs = jax.tree.map(lambda x: jnp.stack([x] * batch), seq)
+    seqs = compute_plane.replicate(_init_seq(cfg), batch)
     return BatchedKVStoreState(seqs=seqs, fab=_init_fab(cfg, link),
                                clock=jnp.zeros((), F32))
+
+
+def init_kv_store_replicated(cfg: KVStoreConfig, num_replicas: int,
+                             batch: int, link: LinkModel = None,
+                             nic_link: LinkModel = None
+                             ) -> ReplicatedKVStoreState:
+    """C replicas x B tenants against one shared memory-side fabric.
+
+    `link` is the (optionally time-varying) memory-side LinkModel as in
+    `init_kv_store_batch`; `nic_link` overrides the per-replica NIC link,
+    which otherwise derives from the memory link (its mean per-module
+    bandwidth + ambient schedule, `compute_plane.nic_link_for`)."""
+    seqs = compute_plane.replicate(_init_seq(cfg), num_replicas * batch)
+    fab = _init_fab(cfg, link)
+    if nic_link is None:
+        nic_link = compute_plane.nic_link_for(fab.link, num_replicas)
+    nic = compute_plane.init_nic_bank(num_replicas, link=nic_link,
+                                      ratio=cfg.daemon.bw_ratio)
+    return ReplicatedKVStoreState(seqs=seqs, fab=fab, nic=nic,
+                                  clock=jnp.zeros((), F32))
 
 
 def _token_bytes(cfg: KVStoreConfig) -> float:
@@ -222,8 +292,14 @@ def page_cost_steps(cfg: KVStoreConfig) -> int:
 
 # ------------------------------------------------------------ landing
 def _land(seq: SeqState, cfg: KVStoreConfig, remote_k, remote_v, clock
-          ) -> SeqState:
+          ) -> Tuple[SeqState, jnp.ndarray]:
     """Land arrived pages into LRU victim slots.
+
+    Returns (seq', evicted) where `evicted` (k_land,) int32 holds the
+    page ids of locally-written (dirty) pages this landing evicted from
+    the pool (-1 elsewhere) — the caller routes them through the
+    dirty-eviction writeback path on the shared fabric (the landing
+    itself cannot: it is vmapped per sequence, the fabric is shared).
 
     Landed inflight entries are compacted to the front so the remote tier
     is gathered ONCE for at most min(P, N) actually-landed pages —
@@ -244,6 +320,7 @@ def _land(seq: SeqState, cfg: KVStoreConfig, remote_k, remote_v, clock
     landed, landed_pages = poll_arrivals(seq.eng, clock)
     p = int(landed.shape[0])
     k_land = min(p, cfg.num_local_pages)
+    no_evict = jnp.full((k_land,), -1, jnp.int32)
 
     def do_land(seq):
         order = jnp.argsort(jnp.logical_not(landed).astype(jnp.int32),
@@ -256,6 +333,9 @@ def _land(seq: SeqState, cfg: KVStoreConfig, remote_k, remote_v, clock
         page_v = ops.paged_gather(remote_v, jnp.maximum(pids, 0)).astype(
             seq.vpool.dtype)
         victims = jnp.argsort(seq.slot_age, stable=True)[:k_land]
+        evicted = jnp.where(
+            do & seq.slot_dirty[victims] & (seq.slot_page[victims] >= 0),
+            seq.slot_page[victims], no_evict)
 
         def put(tbl, val):
             gate = do.reshape((-1,) + (1,) * (tbl.ndim - 1))
@@ -264,19 +344,26 @@ def _land(seq: SeqState, cfg: KVStoreConfig, remote_k, remote_v, clock
         return seq._replace(
             slot_page=put(seq.slot_page, pids),
             slot_age=put(seq.slot_age, jnp.broadcast_to(clock, (k_land,))),
+            # a freshly landed page is a clean remote copy
+            slot_dirty=put(seq.slot_dirty, jnp.zeros((k_land,), bool)),
             kpool=put(seq.kpool, page_k),
             vpool=put(seq.vpool, page_v),
-        )
+        ), evicted
 
-    seq = jax.lax.cond(jnp.any(landed), do_land, lambda s: s, seq)
+    seq, evicted = jax.lax.cond(jnp.any(landed), do_land,
+                                lambda s: (s, no_evict), seq)
     return seq._replace(eng=retire_arrivals(seq.eng, clock,
-                                            cfg.daemon.lines_per_page))
+                                            cfg.daemon.lines_per_page)
+                        ), evicted
 
 
 # ------------------------------------------------------------- lookup
-def _lookup(seq: SeqState, clock, needed_pages):
+def _lookup(seq: SeqState, clock, needed_pages, needed_writes):
     """Vectorized CAM lookup + local-pool serve — after landing, so a page
     that arrives this step hits immediately (desim: tbl_valid <= t_issue).
+    `needed_writes` marks requests that WRITE their page (KV append):
+    a written resident page turns dirty — its eventual eviction owes a
+    writeback (scatter-max: duplicate slots OR their write flags).
     """
     eq = seq.slot_page[None, :] == needed_pages[:, None]     # (R, N)
     local_hit = jnp.any(eq, axis=1)
@@ -284,7 +371,9 @@ def _lookup(seq: SeqState, clock, needed_pages):
     k_local = ops.paged_gather(seq.kpool, jnp.maximum(slot, 0))
     v_local = ops.paged_gather(seq.vpool, jnp.maximum(slot, 0))
     slot_age = seq.slot_age.at[slot].max(jnp.where(local_hit, clock, 0.0))
-    return seq._replace(slot_age=slot_age), k_local, v_local, local_hit
+    slot_dirty = seq.slot_dirty.at[slot].max(local_hit & needed_writes)
+    return (seq._replace(slot_age=slot_age, slot_dirty=slot_dirty),
+            k_local, v_local, local_hit)
 
 
 def _remote_fetch(remote_k, remote_v, pages_flat, any_miss):
@@ -308,8 +397,8 @@ def _remote_fetch(remote_k, remote_v, pages_flat, any_miss):
 
 # ---------------------------------------------------------- scheduling
 def _schedule(seq: SeqState, fab: FabricState, cfg: KVStoreConfig,
-              needed_pages, needed_offsets, local_hit, clock
-              ) -> Tuple[SeqState, FabricState]:
+              needed_pages, needed_offsets, local_hit, clock,
+              evicted=None, nic=None, cu=None, active=True):
     """Route every miss through the shared §4.2 selection unit and serve
     its transfers on the shared fabric (sequential within the step, so
     same-page requests dedup and queue exactly like the simulator).
@@ -329,15 +418,78 @@ def _schedule(seq: SeqState, fab: FabricState, cfg: KVStoreConfig,
     inflight page arrival / own page completion, minus the clock; hit
     requests contribute zero) — the aggregate-latency metric
     `benchmarks/robustness.py` reports alongside the wire-lag makespan.
+
+    `evicted` (k,) int32 (-1 padded) are this step's dirty pool
+    evictions (from `_land`): each is offered to the §4.3 dirty unit
+    (`note_dirty_eviction` — buffered if its page is inflight and under
+    threshold, throttling past it) and, when not buffered, serialized on
+    the victim page's module writeback channel.
+
+    `nic`/`cu`/`active` switch on the compute plane's two-leg pricing:
+    when a per-replica NIC bank is passed, every transfer (requests AND
+    writebacks) also serializes on unit `cu`'s NIC channels with arrival
+    = the later completion (`compute_plane.serve_dual_two_leg`). Returns
+    (seq', fab', nic') — nic' is None on the single-endpoint path.
     """
     r = needed_pages.shape[0]
     dp = cfg.daemon
     nominal = float(page_cost_steps(cfg))
     line_wire = _wire_bytes(cfg, 1, False)            # critical token, raw
     page_wire = _wire_bytes(cfg, cfg.page_tokens, cfg.compress_pages)
+    page_raw = _wire_bytes(cfg, cfg.page_tokens, False)
+
+    if nic is None:
+        def serve(fab, nic, mc, *, line_gate, page_gate):
+            fab, line_done, page_done = fabric.serve_dual_at(
+                fab, mc, partition=True, now=clock,
+                line_ready=clock, line_bytes=line_wire,
+                line_gate=line_gate,
+                page_ready=clock, page_bytes=page_wire,
+                page_gate=page_gate)
+            return fab, nic, line_done, page_done, page_done
+
+        def serve_wb(fab, nic, mc, gate):
+            fab, _ = fabric.serve_writeback_at(fab, mc, clock, page_wire,
+                                               gate=gate)
+            return fab, nic
+    else:
+        def serve(fab, nic, mc, *, line_gate, page_gate):
+            fab, nic, line_done, page_done, _, pd_mod = \
+                compute_plane.serve_dual_two_leg(
+                    fab, nic, mc, cu, partition=True, now=clock,
+                    line_ready=clock, line_bytes=line_wire,
+                    line_gate=line_gate,
+                    page_ready=clock, page_bytes=page_wire,
+                    page_gate=page_gate, active=active)
+            return fab, nic, line_done, page_done, pd_mod
+
+        def serve_wb(fab, nic, mc, gate):
+            fab, nic, _ = compute_plane.serve_writeback_two_leg(
+                fab, nic, mc, cu, clock, page_wire, gate=gate,
+                active=active)
+            return fab, nic
+
+    # ---- dirty-eviction writebacks (pages written locally, now evicted:
+    # §4.3 dirty unit first, writeback channel when not buffered) ----
+    if evicted is None:
+        evicted = jnp.full((0,), -1, jnp.int32)
+
+    def wb_one(carry, pid):
+        eng, fab, nic = carry
+        ok = pid >= 0
+        mc = fabric.place(cfg.fabric, jnp.maximum(pid, 0))
+        new_eng, buffered = note_dirty_eviction(eng, pid, dp)
+        eng = _gate_tree(ok, eng, new_eng)
+        wb = ok & ~buffered
+        fab, nic = serve_wb(fab, nic, mc, wb)
+        return (eng, fab, nic), wb
+
+    (eng, fab, nic), wrote_back = jax.lax.scan(
+        wb_one, (seq.eng, fab, nic), evicted)
+    n_wb = jnp.sum(wrote_back)
 
     def sched_one(carry, i):
-        eng, fab = carry
+        eng, fab, nic = carry
         pid = needed_pages[i]
         off = needed_offsets[i] % dp.lines_per_page
         mc = fabric.place(cfg.fabric, pid)
@@ -359,11 +511,11 @@ def _schedule(seq: SeqState, fab: FabricState, cfg: KVStoreConfig,
         # inflight page the request can ride (lookup BEFORE scheduling)
         inflight, pidx = find(eng.page_key, pid)
         pending = jnp.where(inflight, eng.page_arrival[pidx], BIG)
-        fab, line_done, page_done = fabric.serve_dual_at(
-            fab, mc, partition=True, now=clock,
-            line_ready=clock, line_bytes=line_wire, line_gate=do_line,
-            page_ready=clock, page_bytes=page_wire, page_gate=do_page)
-        page_start = page_done - page_wire / jnp.maximum(
+        fab, nic, line_done, page_done, page_done_mod = serve(
+            fab, nic, mc, line_gate=do_line, page_gate=do_page)
+        # issue (left the page queue) = transmission start on the MODULE
+        # channel — the §4.2 race window, as in desim's pn_start
+        page_start = page_done_mod - page_wire / jnp.maximum(
             bw * page_share, 1e-6)
         eng = _gate_tree(do_page, eng,
                          schedule_page(eng, pid, page_start, page_done))
@@ -377,10 +529,10 @@ def _schedule(seq: SeqState, fab: FabricState, cfg: KVStoreConfig,
         served_at = jnp.where(served_at >= BIG / 2, clock + nominal,
                               served_at)
         stall = jnp.where(miss, jnp.maximum(served_at - clock, 0.0), 0.0)
-        return (eng, fab), (do_line, do_page, stall)
+        return (eng, fab, nic), (do_line, do_page, stall)
 
-    (eng, fab), (line_sent, scheduled, stalls) = jax.lax.scan(
-        sched_one, (seq.eng, fab), jnp.arange(r))
+    (eng, fab, nic), (line_sent, scheduled, stalls) = jax.lax.scan(
+        sched_one, (eng, fab, nic), jnp.arange(r))
 
     n_sub = jnp.sum(line_sent)
     n_sched = jnp.sum(scheduled)
@@ -389,15 +541,18 @@ def _schedule(seq: SeqState, fab: FabricState, cfg: KVStoreConfig,
     stats = {
         "sub_block_fetches": stt["sub_block_fetches"] + n_sub,
         "page_moves": stt["page_moves"] + n_sched,
-        "wire_bytes": stt["wire_bytes"] + sub_bytes + n_sched * page_wire,
+        "wire_bytes": stt["wire_bytes"] + sub_bytes + n_sched * page_wire
+        + n_wb * page_wire,
         "uncompressed_bytes": stt["uncompressed_bytes"] + sub_bytes
-        + n_sched * _wire_bytes(cfg, cfg.page_tokens, False),
+        + (n_sched + n_wb) * page_raw,
         "local_hits": stt["local_hits"] + jnp.sum(local_hit),
         "requests": stt["requests"] + r,
         # aggregate movement-plane delay: mean per-request stall this step
         "stall_steps": stt["stall_steps"] + jnp.mean(stalls),
+        "writeback_bytes": stt["writeback_bytes"] + n_wb * page_wire,
+        "dirty_evicts": stt["dirty_evicts"] + n_wb,
     }
-    return seq._replace(eng=eng, stats=stats), fab
+    return seq._replace(eng=eng, stats=stats), fab, nic
 
 
 def _offsets_or_zero(needed_pages, needed_offsets):
@@ -406,15 +561,26 @@ def _offsets_or_zero(needed_pages, needed_offsets):
     return jnp.asarray(needed_offsets, jnp.int32)
 
 
+def _writes_or_zero(needed_pages, needed_writes):
+    if needed_writes is None:
+        return jnp.zeros(needed_pages.shape, bool)
+    return jnp.asarray(needed_writes, bool)
+
+
 # ------------------------------------------------------------- steppers
 def step_fetch(state: KVStoreState, cfg: KVStoreConfig,
-               remote_k, remote_v, needed_pages, needed_offsets=None):
+               remote_k, remote_v, needed_pages, needed_offsets=None,
+               needed_writes=None):
     """Serve one decode step needing `needed_pages` (R,) page ids.
 
     `needed_offsets` (R,) are the requests' token offsets within their
     pages — the sub-block plane keys on the same packed (page<<6|off)
     the simulator uses, so repeat touches of one token dedup while
     distinct tokens of one page race independently. Defaults to offset 0.
+    `needed_writes` (R,) bool marks requests that WRITE their page (the
+    KV append of the current decode position): a written resident page
+    turns dirty and owes a writeback when later evicted. Defaults to
+    all-False (read-only — the pre-writeback-path behavior, unchanged).
 
     Returns (state, k (R,page,KV,D), v, served_local (R,) bool).
     Misses are served via the sub-block plane from the remote tier now;
@@ -425,21 +591,24 @@ def step_fetch(state: KVStoreState, cfg: KVStoreConfig,
     simulator's race rule).
     """
     offs = _offsets_or_zero(needed_pages, needed_offsets)
+    writes = _writes_or_zero(needed_pages, needed_writes)
     clock = state.clock + 1.0
-    seq = _land(state.seq, cfg, remote_k, remote_v, clock)
-    seq, k_local, v_local, local_hit = _lookup(seq, clock, needed_pages)
+    seq, evicted = _land(state.seq, cfg, remote_k, remote_v, clock)
+    seq, k_local, v_local, local_hit = _lookup(seq, clock, needed_pages,
+                                               writes)
     k_remote, v_remote = _remote_fetch(remote_k, remote_v, needed_pages,
                                        jnp.any(~local_hit))
     sel = local_hit[:, None, None, None]
     k = jnp.where(sel, k_local.astype(k_remote.dtype), k_remote)
     v = jnp.where(sel, v_local.astype(v_remote.dtype), v_remote)
-    seq, fab = _schedule(seq, state.fab, cfg, needed_pages, offs,
-                         local_hit, clock)
+    seq, fab, _ = _schedule(seq, state.fab, cfg, needed_pages, offs,
+                            local_hit, clock, evicted)
     return KVStoreState(seq=seq, fab=fab, clock=clock), k, v, local_hit
 
 
 def step_fetch_batch(state: BatchedKVStoreState, cfg: KVStoreConfig,
-                     remote_k, remote_v, needed_pages, needed_offsets=None):
+                     remote_k, remote_v, needed_pages, needed_offsets=None,
+                     needed_writes=None):
     """Serve one decode step for a whole batch: `needed_pages` (B, R).
 
     Landing, lookup and the local serve are `vmap`ped across the B
@@ -453,11 +622,13 @@ def step_fetch_batch(state: BatchedKVStoreState, cfg: KVStoreConfig,
     """
     b, r = needed_pages.shape
     offs = _offsets_or_zero(needed_pages, needed_offsets)
+    writes = _writes_or_zero(needed_pages, needed_writes)
     clock = state.clock + 1.0
-    seqs = jax.vmap(lambda s: _land(s, cfg, remote_k, remote_v, clock))(
-        state.seqs)
+    seqs, evicted = jax.vmap(
+        lambda s: _land(s, cfg, remote_k, remote_v, clock))(state.seqs)
     seqs, k_local, v_local, local_hit = jax.vmap(
-        lambda s, need: _lookup(s, clock, need))(seqs, needed_pages)
+        lambda s, need, wr: _lookup(s, clock, need, wr))(
+            seqs, needed_pages, writes)
     k_remote, v_remote = _remote_fetch(remote_k, remote_v,
                                        needed_pages.reshape(-1),
                                        jnp.any(~local_hit))
@@ -468,22 +639,87 @@ def step_fetch_batch(state: BatchedKVStoreState, cfg: KVStoreConfig,
     v = jnp.where(sel, v_local.astype(v_remote.dtype), v_remote)
 
     def sched_seq(fab, xs):
-        seq, need, off, hit = xs
-        seq, fab = _schedule(seq, fab, cfg, need, off, hit, clock)
+        seq, need, off, hit, ev = xs
+        seq, fab, _ = _schedule(seq, fab, cfg, need, off, hit, clock, ev)
         return fab, seq
 
     fab, seqs = jax.lax.scan(sched_seq, state.fab,
-                             (seqs, needed_pages, offs, local_hit))
+                             (seqs, needed_pages, offs, local_hit,
+                              evicted))
     return (BatchedKVStoreState(seqs=seqs, fab=fab, clock=clock),
             k, v, local_hit)
 
 
+def step_fetch_replicated(state: ReplicatedKVStoreState,
+                          cfg: KVStoreConfig, remote_k, remote_v,
+                          needed_pages, needed_offsets=None,
+                          needed_writes=None):
+    """Serve one decode step for C replicas x B tenants:
+    `needed_pages` (C, B, R) (replica-major, matching the state layout).
+
+    Landing / lookup / local serve are `vmap`ped across all C*B
+    sequences and the remote critical fetch is one gather, exactly like
+    `step_fetch_batch`; scheduling folds over the sequences in
+    replica-major order with BOTH banks as carry — the shared memory-side
+    fabric (all replicas queue on the same per-module channels) and the
+    per-replica NIC bank (each replica's transfers additionally
+    serialize on its own ingress, arrival = the later completion). With
+    C == 1 the NIC leg is gated off and this is `step_fetch_batch`.
+
+    Returns (state, k (C,B,R,page,KV,D), v, served_local (C,B,R) bool).
+    """
+    c, b, r = needed_pages.shape
+    flat = needed_pages.reshape((c * b, r))
+    offs = _offsets_or_zero(flat, None if needed_offsets is None
+                            else jnp.asarray(needed_offsets).reshape(
+                                (c * b, r)))
+    writes = _writes_or_zero(flat, None if needed_writes is None
+                             else jnp.asarray(needed_writes).reshape(
+                                 (c * b, r)))
+    cus = jnp.arange(c * b, dtype=jnp.int32) // b    # owning replica
+    active = c > 1
+    clock = state.clock + 1.0
+    seqs, evicted = jax.vmap(
+        lambda s: _land(s, cfg, remote_k, remote_v, clock))(state.seqs)
+    seqs, k_local, v_local, local_hit = jax.vmap(
+        lambda s, need, wr: _lookup(s, clock, need, wr))(seqs, flat,
+                                                         writes)
+    k_remote, v_remote = _remote_fetch(remote_k, remote_v,
+                                       flat.reshape(-1),
+                                       jnp.any(~local_hit))
+    k_remote = k_remote.reshape((c * b, r) + tuple(k_remote.shape[1:]))
+    v_remote = v_remote.reshape((c * b, r) + tuple(v_remote.shape[1:]))
+    sel = local_hit[:, :, None, None, None]
+    k = jnp.where(sel, k_local.astype(k_remote.dtype), k_remote)
+    v = jnp.where(sel, v_local.astype(v_remote.dtype), v_remote)
+
+    def sched_seq(carry, xs):
+        fab, nic = carry
+        seq, need, off, hit, ev, cu = xs
+        seq, fab, nic = _schedule(seq, fab, cfg, need, off, hit, clock,
+                                  ev, nic=nic, cu=cu, active=active)
+        return (fab, nic), seq
+
+    (fab, nic), seqs = jax.lax.scan(
+        sched_seq, (state.fab, state.nic),
+        (seqs, flat, offs, local_hit, evicted, cus))
+    kv_shape = (c, b, r) + tuple(k_remote.shape[2:])
+    return (ReplicatedKVStoreState(seqs=seqs, fab=fab, nic=nic,
+                                   clock=clock),
+            k.reshape(kv_shape), v.reshape(kv_shape),
+            local_hit.reshape((c, b, r)))
+
+
 def ledger(state) -> dict:
     """Python-side movement summary: stats totals (summed over the batch
-    for a BatchedKVStoreState) + the fabric's per-module wire bytes."""
+    for a Batched/ReplicatedKVStoreState) + the fabric's per-module wire
+    bytes (+ per-unit NIC bytes for a replicated store)."""
     seq = state.seq if isinstance(state, KVStoreState) else state.seqs
     out = {k: float(jnp.sum(v)) for k, v in seq.stats.items()}
     fab = state.fab
     out["module_bytes"] = [
         float(x) for x in fab.line_bytes + fab.page_bytes + fab.wb_bytes]
+    if isinstance(state, ReplicatedKVStoreState):
+        out["unit_bytes"] = [
+            float(x) for x in compute_plane.unit_bytes(state.nic)]
     return out

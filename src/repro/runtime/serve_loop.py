@@ -18,6 +18,13 @@ may be a time-varying `LinkModel` (per-module bandwidth schedule +
 health masks); a `runtime.fault.LinkHealthMonitor` watching the sampled
 health surfaces reshard advisories for degraded/flapping modules in the
 returned ledger.
+
+`serve_replicated` is the compute-plane variant: C serving replicas x B
+tenants each against ONE memory-side fabric, every replica's transfers
+additionally serialized on its own NIC bank (two-leg pricing,
+`repro.core.compute_plane`) — the serving analogue of the paper's
+multiple-compute-components scaling axis (fig 22), and what
+`benchmarks/scaling.py` sweeps into BENCH_scale.json.
 """
 from __future__ import annotations
 
@@ -30,8 +37,10 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.daemon_store import (KVStoreConfig, init_kv_store_batch,
+                                     init_kv_store_replicated,
                                      ledger as store_ledger,
-                                     step_fetch_batch)
+                                     step_fetch_batch,
+                                     step_fetch_replicated)
 from repro.models.model import (ModelOptions, decode_step,
                                 init_decode_state)
 
@@ -99,12 +108,15 @@ def paged_request_window(positions, seq_ids, page_tokens: int,
                          window: int, pages_per_seq: int):
     """Per-sequence hot-page window at the given decode positions.
 
-    Returns (pages (B, W) int32, offsets (B, W) int32): the W most
-    recently written KV pages of each sequence, mapped into the tenant's
-    region of the shared remote pool (`seq * pages_per_seq + logical`),
-    with the request's real token offset within its page — the current
-    position's offset on the newest page, the page's last token on the
-    older (fully written) ones.
+    Returns (pages (B, W) int32, offsets (B, W) int32, writes (B, W)
+    bool): the W most recently written KV pages of each sequence, mapped
+    into the tenant's region of the shared remote pool
+    (`seq * pages_per_seq + logical`), with the request's real token
+    offset within its page — the current position's offset on the newest
+    page, the page's last token on the older (fully written) ones. The
+    newest page (j == 0) is the one the current position APPENDS KV to:
+    its `writes` flag is set, so the store marks the resident copy dirty
+    and its eventual eviction pays a writeback (§4.3 serving side).
     """
     positions = jnp.asarray(positions, jnp.int32)
     seq_ids = jnp.asarray(seq_ids, jnp.int32)
@@ -115,7 +127,8 @@ def paged_request_window(positions, seq_ids, page_tokens: int,
     offs = jnp.where(j[None, :] == 0,
                      positions[:, None] % page_tokens,
                      page_tokens - 1)
-    return pages.astype(jnp.int32), offs.astype(jnp.int32)
+    writes = jnp.broadcast_to(j[None, :] == 0, pages.shape)
+    return pages.astype(jnp.int32), offs.astype(jnp.int32), writes
 
 
 def serve_batch_paged(params, cfg: ArchConfig, prompts, scfg: ServeConfig,
@@ -173,12 +186,12 @@ def serve_batch_paged(params, cfg: ArchConfig, prompts, scfg: ServeConfig,
 
     @jax.jit
     def kv_step(kv_state, pos):
-        need, offs = paged_request_window(
+        need, offs, writes = paged_request_window(
             jnp.full((b,), pos, jnp.int32), seq_ids,
             store_cfg.page_tokens, pcfg.window_pages, pcfg.pages_per_seq)
         kv_state, _, _, _ = step_fetch_batch(kv_state, store_cfg,
                                              remote_k, remote_v, need,
-                                             offs)
+                                             offs, writes)
         return kv_state
 
     out = [prompts]
@@ -201,3 +214,70 @@ def serve_batch_paged(params, cfg: ArchConfig, prompts, scfg: ServeConfig,
     if health_monitor is not None:
         led["link_reshard_modules"] = sorted(reshard_advised)
     return jnp.concatenate(out + gen, axis=1), led
+
+
+def serve_replicated(params, cfg: ArchConfig, prompts, scfg: ServeConfig,
+                     store_cfg: KVStoreConfig, num_replicas: int,
+                     pcfg: PagedServeConfig = PagedServeConfig(),
+                     opt: ModelOptions = None, link=None):
+    """Replicated serving: C serving replicas x B tenants each, one
+    shared memory-side fabric (the compute plane, DESIGN.md §7).
+
+    Runs the `serve_batch_paged` decode schedule over the C*B flattened
+    sequence set (each replica decodes its own B-tenant batch of the
+    given prompts) and per step drives `step_fetch_replicated`: every
+    replica's page migrations queue on the SAME per-module memory
+    channels while additionally serializing on the replica's own NIC
+    bank — the multi-client-contention workload of a real disaggregated
+    rack. Each of the C*B tenants owns a distinct region of one shared
+    remote KV pool.
+
+    Returns (tokens (C, B, P + max_new_tokens), ledger dict — including
+    per-module `module_bytes` and per-replica `unit_bytes`).
+    """
+    opt = opt or ModelOptions(remat="none")
+    c = num_replicas
+    b, p = prompts.shape
+    flat_prompts = jnp.tile(prompts, (c, 1))             # (C*B, P)
+    max_len = p + scfg.max_new_tokens
+    state, _ = init_decode_state(cfg, c * b, max_len, opt)
+    step = make_decode_fn(cfg, opt)
+    key = jax.random.PRNGKey(scfg.seed)
+
+    kv = init_kv_store_replicated(store_cfg, c, b, link=link)
+    n_remote = c * b * pcfg.pages_per_seq
+    rshape = (n_remote, store_cfg.page_tokens, store_cfg.kv_heads,
+              store_cfg.head_dim)
+    remote_k = jnp.zeros(rshape, jnp.bfloat16)
+    remote_v = jnp.zeros(rshape, jnp.bfloat16)
+    seq_ids = jnp.arange(c * b, dtype=jnp.int32)
+
+    @jax.jit
+    def kv_step(kv_state, pos):
+        need, offs, writes = paged_request_window(
+            jnp.full((c * b,), pos, jnp.int32), seq_ids,
+            store_cfg.page_tokens, pcfg.window_pages, pcfg.pages_per_seq)
+        shape = (c, b, pcfg.window_pages)
+        kv_state, _, _, _ = step_fetch_replicated(
+            kv_state, store_cfg, remote_k, remote_v,
+            need.reshape(shape), offs.reshape(shape),
+            writes.reshape(shape))
+        return kv_state
+
+    out = [flat_prompts]
+    for i in range(p):
+        key, sub = jax.random.split(key)
+        nxt, state = step(params, state, flat_prompts[:, i:i + 1],
+                          jnp.int32(i), sub,
+                          jnp.float32(scfg.temperature))
+        kv = kv_step(kv, jnp.int32(i))
+    tok = nxt
+    gen = []
+    for i in range(scfg.max_new_tokens):
+        gen.append(tok)
+        key, sub = jax.random.split(key)
+        tok, state = step(params, state, tok, jnp.int32(p + i), sub,
+                          jnp.float32(scfg.temperature))
+        kv = kv_step(kv, jnp.int32(p + i))
+    tokens = jnp.concatenate(out + gen, axis=1)
+    return tokens.reshape((c, b, -1)), store_ledger(kv)

@@ -19,16 +19,30 @@ schedule is bit-identical to a scalar bandwidth. The serving KV store
 model, so simulator and store cannot diverge on routing, channel
 arithmetic, or variability semantics.
 
+The compute side is the mirror substrate (``repro.core.compute_plane``):
+``SimConfig.num_cu`` sizes a per-unit envelope — each compute unit owns
+its MLP ring, its local page table, its DaeMon engines, and a NIC channel
+bank (line/page/writeback busy-until clocks, one set per unit) — while
+the shared module banks stay the contention point all units meet at.
+Requests shard into per-unit streams over the shared footprint by page
+hash (``compute_plane.shard_unit``); every network transfer is priced on
+TWO legs — the shared module's channel AND the requesting unit's NIC —
+with arrival = the later completion. The number of *active* units is
+traced data (an `active_cu` lattice axis, like the link-profile knots),
+and the NIC leg is gated off when only one unit is active, so the
+``num_cu=1`` path is bit-identical to the pre-compute-plane seed golden.
+
 Scheme flags are *traced data* (``repro.sim.schemes.TraceableFlags``), not
 static Python: every scheme switch in the per-request transition is a
 ``where`` — including the static-vs-adaptive §4.1 repartitioning switch
 (the partition ratio is carried per-module state in the fabric, updated by
 ``bandwidth.adapt_ratio`` only when the `adaptive` flag is set) — so
 ``simulate_lattice`` runs the whole scheme x network x bw-ratio x
-link-profile lattice as ONE compiled program ``vmap``ped over both axes —
-one jit trace per (trace shape, footprint, SimConfig, schedule knot
-count) instead of one per scheme or per profile. ``simulate_grid`` is the
-single-scheme wrapper kept for paired baseline/variant comparisons.
+link-profile x compute-unit lattice as ONE compiled program ``vmap``ped
+over all three axes — one jit trace per (trace shape, footprint,
+SimConfig, schedule knot count, active-C count) instead of one per
+scheme, profile, or unit count. ``simulate_grid`` is the single-scheme
+wrapper kept for paired baseline/variant comparisons.
 
 Fidelity notes (vs the paper's cycle-accurate setup) are in DESIGN.md.
 """
@@ -42,7 +56,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bandwidth, fabric
+from repro.core import bandwidth, compute_plane, fabric
 from repro.core.engine import (EngineState, gate_tree as _gate_tree,
                                init_engine_state, find, retire_arrivals,
                                schedule_line, schedule_page,
@@ -65,22 +79,34 @@ class SimConfig:
     num_mc: int = 1               # memory components (fig 17/22)
     mlp: int = MLP_W
     placement: str = "interleave"  # page->module policy (fabric.PLACEMENTS)
+    # compute-unit ENVELOPE (fig 22): sizes the per-unit state arrays
+    # (rings, tables, engines, NIC banks). How many units actually
+    # receive requests is traced data — `simulate_lattice(active_cus=)`
+    # — so one envelope compiles once for every C <= num_cu point.
+    num_cu: int = 1
 
     def fabric_config(self) -> fabric.FabricConfig:
         return fabric.FabricConfig(num_modules=self.num_mc,
                                    placement=self.placement)
 
+    def compute_config(self) -> compute_plane.ComputePlaneConfig:
+        return compute_plane.ComputePlaneConfig(num_units=self.num_cu)
+
 
 class SimState(NamedTuple):
-    t: jnp.ndarray
-    ring: jnp.ndarray            # (W,) outstanding completions
-    tbl_page: jnp.ndarray        # (SETS, WAYS) int32
-    tbl_age: jnp.ndarray        # (SETS, WAYS) f32
-    tbl_valid: jnp.ndarray       # (SETS, WAYS) f32 (page arrival time)
-    tbl_dirty: jnp.ndarray       # (SETS, WAYS) bool
-    eng: EngineState
+    """Per-compute-unit leaves carry a leading (C,) axis (C = num_cu);
+    `net`/`mem` are the shared per-module banks all units contend on;
+    `nic` is the compute-side per-unit channel bank."""
+    t: jnp.ndarray               # (C,) per-unit core clock
+    ring: jnp.ndarray            # (C, W) outstanding completions per unit
+    tbl_page: jnp.ndarray        # (C, SETS, WAYS) int32
+    tbl_age: jnp.ndarray         # (C, SETS, WAYS) f32
+    tbl_valid: jnp.ndarray       # (C, SETS, WAYS) f32 (page arrival time)
+    tbl_dirty: jnp.ndarray       # (C, SETS, WAYS) bool
+    eng: EngineState             # leaves (C, ...): one engine per unit
     net: fabric.FabricState      # network-link channel bank (M modules)
     mem: fabric.FabricState      # remote-memory bus channel bank
+    nic: fabric.FabricState      # compute-side NIC bank (C units)
     stats: dict
 
 
@@ -100,32 +126,38 @@ def _net_link(net) -> fabric.LinkModel:
 def _init_state(cfg: SimConfig, n_pages: int, net, ratio0) -> SimState:
     cap = max(WAYS, int(n_pages * cfg.local_frac))
     sets = max(1, cap // WAYS)
+    c = cfg.num_cu
     fcfg = cfg.fabric_config()
     # the remote-memory bus is a constant link (the paper's variability
     # axis is the network); it still carries its own adapted ratio
+    net_link = _net_link(net)
     mem_link = fabric.constant_link(jnp.asarray(net["membw"], F32),
                                     cfg.num_mc)
     return SimState(
-        t=jnp.zeros((), F32),
-        ring=jnp.zeros((cfg.mlp,), F32),
-        tbl_page=jnp.full((sets, WAYS), -1, jnp.int32),
-        tbl_age=jnp.zeros((sets, WAYS), F32),
-        tbl_valid=jnp.full((sets, WAYS), BIG, F32),
-        tbl_dirty=jnp.zeros((sets, WAYS), bool),
-        eng=init_engine_state(cfg.daemon),
-        net=fabric.init_fabric(fcfg, link=_net_link(net), ratio=ratio0),
+        t=jnp.zeros((c,), F32),
+        ring=jnp.zeros((c, cfg.mlp), F32),
+        tbl_page=jnp.full((c, sets, WAYS), -1, jnp.int32),
+        tbl_age=jnp.zeros((c, sets, WAYS), F32),
+        tbl_valid=jnp.full((c, sets, WAYS), BIG, F32),
+        tbl_dirty=jnp.zeros((c, sets, WAYS), bool),
+        eng=compute_plane.replicate(init_engine_state(cfg.daemon), c),
+        net=fabric.init_fabric(fcfg, link=net_link, ratio=ratio0),
         mem=fabric.init_fabric(fcfg, link=mem_link, ratio=ratio0),
+        nic=compute_plane.init_nic_bank(
+            c, link=compute_plane.nic_link_for(net_link, c), ratio=ratio0),
         stats={k: jnp.zeros((), F32) for k in STAT_KEYS},
     )
 
 
-def make_step(flags, cfg: SimConfig, net, comp_ratio, warm_after):
+def make_step(flags, cfg: SimConfig, net, comp_ratio, warm_after,
+              active_cu=1):
     """Per-request transition. `flags` may be a SchemeFlags (converted) or
     a TraceableFlags pytree — possibly traced, so every scheme switch
     below is `where`-gated and one compiled step serves any scheme. `net`
-    (latencies; the link itself rides in the fabric state), `comp_ratio`
-    and `warm_after` are closed over — traced per lattice point, never
-    broadcast per request."""
+    (latencies; the link itself rides in the fabric state), `comp_ratio`,
+    `warm_after` and `active_cu` (how many of the `cfg.num_cu` envelope
+    units receive requests — the compute-scaling lattice axis) are closed
+    over — traced per lattice point, never broadcast per request."""
     fl = as_traceable(flags)
     dp = cfg.daemon
     comp_lat = dp.compress_latency_ns
@@ -140,29 +172,41 @@ def make_step(flags, cfg: SimConfig, net, comp_ratio, warm_after):
     switch = jnp.asarray(net["switch"], F32)
     warm_after = jnp.asarray(warm_after, F32)
     comp_ratio = jnp.asarray(comp_ratio, F32)
+    active_cu = jnp.asarray(active_cu, jnp.int32)
 
     def step(st: SimState, inp):
         page, off, gap, wr = inp
-        sets = st.tbl_page.shape[0]
+        sets = st.tbl_page.shape[1]
         want_page = (fl.move_pages | fl.page_free) & fl.use_local_mem
 
-        # ---- core issue (MLP window) ----
-        oldest = jnp.min(st.ring)
-        slot = jnp.argmin(st.ring)
-        t_issue = jnp.maximum(st.t + gap, oldest)
+        # ---- compute-unit sharding (page-hash -> per-unit streams over
+        # the shared footprint; active_cu == 1 routes all to unit 0) ----
+        cu = compute_plane.shard_unit(page, active_cu)
+        nic_on = active_cu > 1            # NIC leg gate (idle at C=1)
+        ring_u = st.ring[cu]
+        tbl_page_u = st.tbl_page[cu]
+        tbl_age_u = st.tbl_age[cu]
+        tbl_valid_u = st.tbl_valid[cu]
+        tbl_dirty_u = st.tbl_dirty[cu]
+        eng = compute_plane.unit_slice(st.eng, cu)
 
-        # ---- local memory lookup ----
+        # ---- core issue (MLP window, per-unit clock + ring) ----
+        oldest = jnp.min(ring_u)
+        slot = jnp.argmin(ring_u)
+        t_issue = jnp.maximum(st.t[cu] + gap, oldest)
+
+        # ---- local memory lookup (the unit's own page table) ----
         set_idx = page % sets
-        row = st.tbl_page[set_idx]
+        row = tbl_page_u[set_idx]
         hit_vec = row == page
         present = jnp.any(hit_vec)
         way = jnp.argmax(hit_vec)
-        valid_t = st.tbl_valid[set_idx, way]
+        valid_t = tbl_valid_u[set_idx, way]
         is_hit = (present & (valid_t <= t_issue) & fl.use_local_mem) \
             | fl.local_only
         inflight_tbl = present & (valid_t > t_issue)
 
-        eng = retire_arrivals(st.eng, t_issue, lpp)
+        eng = retire_arrivals(eng, t_issue, lpp)
 
         # ---- engine decision (§4.2) ----
         send_line, send_page = select_granularity(
@@ -210,20 +254,25 @@ def make_step(flags, cfg: SimConfig, net, comp_ratio, warm_after):
         # ---- remote-memory bus then network link: each a dual-granularity
         # channel bank on the shared fabric (partitioned virtual channels
         # or one shared FIFO per module, at the LinkModel bandwidth
-        # sampled at this request's issue time) ----
+        # sampled at this request's issue time). The network leg is priced
+        # on TWO endpoints — the shared module bank and the requesting
+        # unit's NIC bank (arrival = later completion); the NIC leg idles
+        # when only one unit is active (bit-identical seed path) ----
         mem_fab, lm_done, pm_done = fabric.serve_dual_at(
             mem_fab, mc, partition=fl.partition, now=t_issue,
             line_ready=t0, line_bytes=line_b, line_gate=send_line,
             page_ready=t0, page_bytes=page_b, page_gate=move_page_physically)
-        net_fab, ln_done, pn_done = fabric.serve_dual_at(
-            net_fab, mc, partition=fl.partition, now=t_issue,
+        (net_fab, nic_fab, ln_done, pn_done, _,
+         pn_done_mod) = compute_plane.serve_dual_two_leg(
+            net_fab, st.nic, mc, cu, partition=fl.partition, now=t_issue,
             line_ready=lm_done, line_bytes=line_b, line_gate=send_line,
             page_ready=pm_done + comp_delay, page_bytes=wire_b,
-            page_gate=move_page_physically)
+            page_gate=move_page_physically, active=nic_on)
         line_arrival = jnp.where(send_line, ln_done + sw, BIG)
-        # "issued" (left the page queue) = network transmission start —
-        # until then a later line request can still win the race (§4.2)
-        pn_start = pn_done - wire_b / jnp.maximum(bw * page_share, 1e-6)
+        # "issued" (left the page queue) = network transmission start on
+        # the MODULE channel — until then a later line request can still
+        # win the race (§4.2)
+        pn_start = pn_done_mod - wire_b / jnp.maximum(bw * page_share, 1e-6)
         page_arrival = jnp.where(move_page_physically,
                                  pn_done + sw + comp_delay, BIG)
         # page-free: materializes at the cost of one line-granularity access
@@ -247,24 +296,26 @@ def make_step(flags, cfg: SimConfig, net, comp_ratio, warm_after):
         eng = _gate_tree(send_line & fl.move_lines, eng,
                          schedule_line(eng, page, off, line_arrival, lpp))
 
-        # ---- local table update (insert page at LRU/FIFO victim) ----
+        # ---- local table update (insert page at LRU/FIFO victim in the
+        # unit's OWN table; writeback priced on both endpoints) ----
         do_insert = send_page & fl.use_local_mem
-        victim = jnp.argmin(st.tbl_age[set_idx])
-        evict_page = st.tbl_page[set_idx, victim]
-        evict_dirty = st.tbl_dirty[set_idx, victim] & (evict_page >= 0)
+        victim = jnp.argmin(tbl_age_u[set_idx])
+        evict_page = tbl_page_u[set_idx, victim]
+        evict_dirty = tbl_dirty_u[set_idx, victim] & (evict_page >= 0)
         wb = do_insert & evict_dirty
         wb_bytes = jnp.where(wb, wire_b, 0.0)
-        net_fab, _ = fabric.serve_writeback_at(net_fab, mc, t_issue,
-                                               wire_b, gate=wb)
+        net_fab, nic_fab, _ = compute_plane.serve_writeback_two_leg(
+            net_fab, nic_fab, mc, cu, t_issue, wire_b, gate=wb,
+            active=nic_on)
 
         def upd(tbl, val, gate, w):
             return tbl.at[set_idx, w].set(
                 jnp.where(gate, val, tbl[set_idx, w]))
 
-        tbl_page = upd(st.tbl_page, page, do_insert, victim)
-        tbl_valid = upd(st.tbl_valid, page_arrival, do_insert, victim)
-        tbl_dirty = upd(st.tbl_dirty, wr, do_insert, victim)
-        tbl_age = upd(st.tbl_age, t_issue, do_insert, victim)
+        tbl_page = upd(tbl_page_u, page, do_insert, victim)
+        tbl_valid = upd(tbl_valid_u, page_arrival, do_insert, victim)
+        tbl_dirty = upd(tbl_dirty_u, wr, do_insert, victim)
+        tbl_age = upd(tbl_age_u, t_issue, do_insert, victim)
         if not cfg.fifo:               # LRU refreshes on hit
             tbl_age = upd(tbl_age, t_issue, is_hit & present, way)
         tbl_dirty = upd(tbl_dirty, tbl_dirty[set_idx, way] | wr,
@@ -302,11 +353,14 @@ def make_step(flags, cfg: SimConfig, net, comp_ratio, warm_after):
         }
 
         new_st = SimState(
-            t=t_issue,
-            ring=st.ring.at[slot].set(done),
-            tbl_page=tbl_page, tbl_age=tbl_age, tbl_valid=tbl_valid,
-            tbl_dirty=tbl_dirty, eng=eng,
-            net=net_fab, mem=mem_fab,
+            t=st.t.at[cu].set(t_issue),
+            ring=st.ring.at[cu, slot].set(done),
+            tbl_page=st.tbl_page.at[cu].set(tbl_page),
+            tbl_age=st.tbl_age.at[cu].set(tbl_age),
+            tbl_valid=st.tbl_valid.at[cu].set(tbl_valid),
+            tbl_dirty=st.tbl_dirty.at[cu].set(tbl_dirty),
+            eng=compute_plane.unit_update(st.eng, cu, eng),
+            net=net_fab, mem=mem_fab, nic=nic_fab,
             stats=stats,
         )
         return new_st, done
@@ -315,13 +369,14 @@ def make_step(flags, cfg: SimConfig, net, comp_ratio, warm_after):
 
 
 def _simulate_point(cfg, n_pages, flags, warm_after, trace_arrays, net,
-                    comp_ratio):
-    """One (scheme, net) lattice point on pure arrays — the vmap kernel."""
+                    comp_ratio, active_cu):
+    """One (scheme, net, active-C) lattice point on pure arrays — the
+    vmap kernel. `active_cu` is traced (<= cfg.num_cu envelope)."""
     ratio0 = as_traceable(flags).bw_ratio
     st = _init_state(cfg, n_pages, net, ratio0)
-    step = make_step(flags, cfg, net, comp_ratio, warm_after)
+    step = make_step(flags, cfg, net, comp_ratio, warm_after, active_cu)
     final, _ = jax.lax.scan(step, st, trace_arrays)
-    total_time = jnp.maximum(jnp.max(final.ring), final.t)
+    total_time = jnp.maximum(jnp.max(final.ring), jnp.max(final.t))
     s = final.stats
     misses = jnp.maximum(s["n"] - s["hits"], 1.0)
     return {
@@ -340,13 +395,18 @@ def _simulate_point(cfg, n_pages, flags, warm_after, trace_arrays, net,
 
 @partial(jax.jit, static_argnums=(0, 1))
 def _lattice_jit(cfg, n_pages, tflags, warm_after, trace_arrays, nets,
-                 comp_ratio):
-    """vmap(schemes) o vmap(nets) over `_simulate_point`, jitted once per
-    (SimConfig, footprint, trace shape, schedule knot count)."""
+                 comp_ratio, active_cus):
+    """vmap(schemes) o vmap(nets) o vmap(active-C) over `_simulate_point`,
+    jitted once per (SimConfig, footprint, trace shape, schedule knot
+    count, C-sweep length)."""
     point = partial(_simulate_point, cfg, n_pages)
-    over_nets = jax.vmap(point, in_axes=(None, None, None, 0, None))
-    over_schemes = jax.vmap(over_nets, in_axes=(0, None, None, None, 0))
-    return over_schemes(tflags, warm_after, trace_arrays, nets, comp_ratio)
+    over_cus = jax.vmap(point, in_axes=(None, None, None, None, None, 0))
+    over_nets = jax.vmap(over_cus, in_axes=(None, None, None, 0, None,
+                                            None))
+    over_schemes = jax.vmap(over_nets, in_axes=(0, None, None, None, 0,
+                                                None))
+    return over_schemes(tflags, warm_after, trace_arrays, nets, comp_ratio,
+                        active_cus)
 
 
 def lattice_cache_size() -> int:
@@ -355,22 +415,36 @@ def lattice_cache_size() -> int:
 
 
 def simulate_lattice(schemes, cfg: SimConfig, trace: Trace, nets,
-                     comp_ratio, warm_frac: float = 0.3):
-    """Every scheme x every net over one trace in ONE compiled program.
+                     comp_ratio, warm_frac: float = 0.3,
+                     active_cus=None):
+    """Every scheme x every net (x every compute-unit count) over one
+    trace in ONE compiled program.
 
     schemes: sequence of SchemeFlags / TraceableFlags — bw-ratio and
     adaptive variants are just more entries on the scheme axis.
     nets: `make_net` dicts — link-schedule profiles (burst / degradation /
     flap, see `repro.sim.workloads.make_link_schedule`) are just more
     entries on the net axis, provided they share a knot count.
-    comp_ratio: scalar or one value per scheme. Returns [scheme][net] ->
-    metrics dict of floats. The jit trace is cached per (SimConfig,
-    footprint, trace shape, knot count), so repeated sweeps — more
-    ratios, more networks, more profiles — cost compile time once.
+    comp_ratio: scalar or one value per scheme.
+    active_cus: optional sequence of active compute-unit counts (each
+    <= cfg.num_cu, the static envelope) — the fig-22 compute-scaling
+    axis. Counts are traced DATA (request->unit sharding + NIC gating),
+    so a {1,2,4,8} sweep rides one compiled program like the link
+    profiles do. None (default) runs the full envelope as a single
+    squeezed point and returns [scheme][net] -> metrics dict of floats;
+    with active_cus the result is [scheme][net][c]. The jit trace is
+    cached per (SimConfig, footprint, trace shape, knot count, C-sweep
+    length), so repeated sweeps — more ratios, more networks, more
+    profiles, more unit counts — cost compile time once.
     """
     schemes = list(schemes)
     if not schemes:
         raise ValueError("simulate_lattice needs at least one scheme")
+    squeeze_cu = active_cus is None
+    cus = [cfg.num_cu] if squeeze_cu else list(active_cus)
+    if any(c < 1 or c > cfg.num_cu for c in cus):
+        raise ValueError(f"active_cus must be within [1, num_cu="
+                         f"{cfg.num_cu}], got {cus}")
     r = len(trace.page)
     arrays = (jnp.asarray(trace.page), jnp.asarray(trace.off),
               jnp.asarray(trace.gap), jnp.asarray(trace.wr))
@@ -380,22 +454,30 @@ def simulate_lattice(schemes, cfg: SimConfig, trace: Trace, nets,
     # warm_after computed in python float64 (f32(warm_frac) * r can round
     # up past the integer boundary and drop the boundary request)
     res = _lattice_jit(cfg, trace.n_pages, stack_flags(schemes),
-                       jnp.asarray(warm_frac * r, F32), arrays, stacked, cr)
-    return [[{k: float(v[i, j]) for k, v in res.items()}
+                       jnp.asarray(warm_frac * r, F32), arrays, stacked,
+                       cr, jnp.asarray(cus, jnp.int32))
+    if squeeze_cu:
+        return [[{k: float(v[i, j, 0]) for k, v in res.items()}
+                 for j in range(len(nets))] for i in range(len(schemes))]
+    return [[[{k: float(v[i, j, c]) for k, v in res.items()}
+              for c in range(len(cus))]
              for j in range(len(nets))] for i in range(len(schemes))]
 
 
 def run_trace(scheme_flags, cfg: SimConfig, trace: Trace, net,
-              comp_ratio, warm_frac: float = 0.3) -> SimState:
+              comp_ratio, warm_frac: float = 0.3,
+              active_cu: int = None) -> SimState:
     """Replay one trace under one scheme/net and return the final
     SimState — the state-level sibling of `simulate_grid`, for callers
-    that need the movement internals (fabric channel banks, link model,
-    adapted ratios, per-module byte ledgers, engine buffers) rather than
-    the metrics dict."""
+    that need the movement internals (fabric channel banks, NIC banks,
+    link model, adapted ratios, per-module/per-unit byte ledgers, engine
+    buffers) rather than the metrics dict. `active_cu` defaults to the
+    full `cfg.num_cu` envelope."""
     r = len(trace.page)
     ratio0 = as_traceable(scheme_flags).bw_ratio
     st = _init_state(cfg, trace.n_pages, net, ratio0)
-    step = make_step(scheme_flags, cfg, net, comp_ratio, warm_frac * r)
+    step = make_step(scheme_flags, cfg, net, comp_ratio, warm_frac * r,
+                     cfg.num_cu if active_cu is None else active_cu)
     xs = (jnp.asarray(trace.page), jnp.asarray(trace.off),
           jnp.asarray(trace.gap), jnp.asarray(trace.wr))
     final, _ = jax.lax.scan(step, st, xs)
