@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import residency
 from repro.core.daemon_store import (init_kv_store_batch,
                                      init_kv_store_replicated, ledger,
                                      step_fetch_batch,
@@ -44,8 +45,9 @@ SERVE_PAGES_PER_TENANT = 64   # remote-pool region per tenant
 
 
 @partial(jax.jit, static_argnums=0)
-def _store_fetch(cfg, state, remote, need, off):
-    return step_fetch_batch(state, cfg, remote, remote, need, off)
+def _store_fetch(cfg, state, remote, need, off, wr=None, pol=None):
+    return step_fetch_batch(state, cfg, remote, remote, need, off, wr,
+                            pol)
 
 
 @jax.jit
@@ -87,24 +89,33 @@ def _warmed_run(state, steps, *, fetch, lag, track_lag) -> dict:
 
 
 def run_store_warmed(cfg, pages, offs, n_remote, *, link=None,
-                     track_lag=False) -> dict:
+                     track_lag=False, writes=None, policy=None) -> dict:
     """Drive a batched DaemonKVStore over (steps, B, W) request streams
     with desim-style warmup gating (`_warmed_run`) — what
-    `benchmarks/serving.py` and `benchmarks/robustness.py` report from.
+    `benchmarks/serving.py`, `benchmarks/robustness.py` and
+    `benchmarks/capacity.py` report from.
 
     The jitted step is a module-level function with `cfg` static, so
     sweeps over link profiles / request streams reuse one compile per
-    store config. Returns the `_warmed_run` dict plus `stall_warm` (the
-    per-sequence stall snapshot at the warm boundary).
+    store config. `writes` (steps, B, W) bool optionally marks KV-append
+    requests (dirty/writeback path); `policy` optionally overrides
+    `cfg.policy` as TRACED flags, so a replacement-policy sweep over one
+    config reuses a single compile (`benchmarks/capacity.py`). Returns
+    the `_warmed_run` dict plus `stall_warm` (the per-sequence stall
+    snapshot at the warm boundary).
     """
     remote = jnp.zeros((n_remote, cfg.page_tokens, cfg.kv_heads,
                         cfg.head_dim), jnp.bfloat16)
     state = init_kv_store_batch(cfg, pages.shape[1], link=link)
+    pol = None if policy is None else residency.as_policy(policy)
 
     def fetch(state, t):
         state, *_ = _store_fetch(cfg, state, remote,
                                  jnp.asarray(pages[t]),
-                                 jnp.asarray(offs[t]))
+                                 jnp.asarray(offs[t]),
+                                 None if writes is None
+                                 else jnp.asarray(writes[t]),
+                                 pol)
         return state
 
     out = _warmed_run(state, pages.shape[0], fetch=fetch, lag=_store_lag,

@@ -241,27 +241,38 @@ def fig15_multithreaded(r=None):
 
 
 def fig16_fifo(r=None):
+    """FIFO replacement in local memory — now the residency plane's
+    unified policy axis: LRU + FIFO ride the lattice's policy dimension
+    in ONE call per workload (no `SimConfig.fifo` recompile; the full
+    four-policy grid is `benchmarks/capacity.py`)."""
+    from repro.core.residency import POLICIES
+    pols = ("lru", "fifo")
     rows = []
-    spds = []
-    cfg = SimConfig(fifo=True)
+    spds = {p: [] for p in pols}
     for wl in ("pr", "bf", "sl", "rs"):
         tr = get_trace(wl, r)
         w = WORKLOADS[wl]
         nets = nets_for([(100.0, 4.0), (400.0, 4.0)])
         base, dm, loc = simulate_lattice(
             [SCHEMES["remote"], SCHEMES["daemon"], SCHEMES["local"]],
-            cfg, tr, nets, w.comp_ratio)
-        for i in range(2):
-            s = base[i]["total_time_ns"] / dm[i]["total_time_ns"]
-            rows.append([wl, [100, 400][i], round(s, 3),
-                         round(base[i]["total_time_ns"]
-                               / loc[i]["total_time_ns"], 3)])
-            spds.append(s)
-    csv_print("fig16 FIFO replacement (paper: daemon 2.63x over remote)",
-              ["workload", "switch_ns", "daemon_speedup", "local_speedup"],
-              rows)
-    print(f"# geomean: {round(geomean(spds), 3)}")
-    return {"rows": rows, "agg": geomean(spds)}
+            SimConfig(), tr, nets, w.comp_ratio,
+            policies=[POLICIES[p] for p in pols])
+        for k, pol in enumerate(pols):
+            for i in range(2):
+                s = (base[i][k]["total_time_ns"]
+                     / dm[i][k]["total_time_ns"])
+                rows.append([wl, pol, [100, 400][i], round(s, 3),
+                             round(base[i][k]["total_time_ns"]
+                                   / loc[i][k]["total_time_ns"], 3)])
+                spds[pol].append(s)
+    csv_print("fig16 replacement policy (paper: daemon 2.63x over remote "
+              "under FIFO)",
+              ["workload", "policy", "switch_ns", "daemon_speedup",
+               "local_speedup"], rows)
+    print(f"# geomean by policy: "
+          f"{ {p: round(geomean(v), 3) for p, v in spds.items()} }")
+    return {"rows": rows, "agg": geomean(spds["fifo"]),
+            "by_policy": {p: geomean(v) for p, v in spds.items()}}
 
 
 MC_CONFIGS = {

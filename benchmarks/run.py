@@ -8,7 +8,10 @@ tokens/s, wire bytes, hit ratio) when the `serve` sweep runs,
 link profiles, sim + store planes) when the `robust` sweep runs, and
 `BENCH_scale.json` (compute-plane scaling: desim total time and
 replicated-store tokens/s vs C compute units x M modules) when the
-`scale` sweep runs. Trace length via REPRO_BENCH_R (default 60000).
+`scale` sweep runs, and `BENCH_capacity.json` (local-memory capacity
+sensitivity: local:remote ratio x replacement policy x scheme on both
+planes, the residency plane's graceful-degradation axis) when the
+`capacity` sweep runs. Trace length via REPRO_BENCH_R (default 60000).
 """
 from __future__ import annotations
 
@@ -19,13 +22,15 @@ from pathlib import Path
 
 import numpy as np
 
-from benchmarks import figures, robustness, roofline, scaling, serving
+from benchmarks import (capacity, figures, robustness, roofline, scaling,
+                        serving)
 from benchmarks.common import ORDER
 from benchmarks.validate import check
 
 BENCH_SERVE_JSON = Path("BENCH_serve.json")
 BENCH_ROBUST_JSON = Path("BENCH_robust.json")
 BENCH_SCALE_JSON = Path("BENCH_scale.json")
+BENCH_CAPACITY_JSON = Path("BENCH_capacity.json")
 
 
 def main() -> None:
@@ -114,6 +119,15 @@ def main() -> None:
               f"daemon {hl['daemon_speedup_c_max']:.2f}x, remote "
               f"{hl['remote_speedup_c_max']:.2f}x "
               f"(gap {hl['scaling_gap']:.2f}x)")
+    if want("capacity"):
+        cp = capacity.capacity_sweep(quick=args.quick)
+        BENCH_CAPACITY_JSON.write_text(json.dumps(cp, indent=2) + "\n")
+        hl = cp["headline"]
+        values["daemon_capacity_slope"] = hl["capacity_gap"]
+        print(f"# BENCH_capacity.json written: 20%->5% slowdown daemon "
+              f"{hl['daemon_slowdown_5pct']:.3f}x vs remote "
+              f"{hl['remote_slowdown_5pct']:.3f}x "
+              f"(gap {hl['capacity_gap']:.3f}x)")
     if want("roofline"):
         roofline.main()
 

@@ -22,6 +22,12 @@ CLAIMS = [
     # figs 17/22: daemon holds its win over remote as compute/memory
     # components scale (paper: 3.25x across the MC configs)
     ("daemon_vs_remote_c8", 3.25, 1.2, 5.0),
+    # residency plane (§6 graceful degradation): shrinking local memory
+    # 4x (20% -> 5% local:remote) slows remote-pages down by a larger
+    # factor than daemon — value is remote_slowdown / daemon_slowdown
+    # (BENCH_capacity.json headline.capacity_gap; daemon stays within
+    # the graceful bound, remote falls outside it)
+    ("daemon_capacity_slope", 1.2, 1.02, 3.0),
     ("lz_vs_fpcbdi", 1.54, 1.1, 2.2),
     ("lz_vs_fve", 1.44, 1.05, 2.1),
 ]

@@ -11,6 +11,11 @@
 #                 (engines/tables on a leading (C,) axis), request->unit
 #                 sharding, per-unit NIC channel banks, and two-leg
 #                 (shared module + requesting unit's NIC) service pricing
+# residency.py    local-memory residency plane: the ONE set-associative
+#                 tier state (page/age/ready/dirty/RRPV) + lookup/insert/
+#                 touch/evict primitives + the traceable replacement-
+#                 policy registry (lru/fifo/rrip/dirty-averse), shared by
+#                 desim's per-unit tables and the store's pool
 # compression.py  §4.4 link compression, TPU-adapted (int8/int4 blocks, BDI)
 # daemon_store.py two-tier paged KV store for serving (sub-block critical
 #                 plane + compressed page plane + adaptive selection),
@@ -43,3 +48,9 @@ from repro.core.engine import (INVALID, MOVED, SCHEDULED, THROTTLED,
                                schedule_line, schedule_page,
                                select_granularity, utilization)
 from repro.core.params import DaemonParams, NetworkParams
+from repro.core.residency import (POLICIES, PolicyFlags, PolicySpec,
+                                  ResidencyState, as_policy,
+                                  evict_order, evict_victim,
+                                  init_residency, insert, lookup,
+                                  lookup_one, mark_dirty, stack_policies,
+                                  touch)

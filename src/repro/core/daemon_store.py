@@ -6,7 +6,12 @@ holds hot KV pages per sequence; the full KV lives in the *remote* tier
 pool, with transfers accounted by the movement planner). Per decode step
 the engine:
 
-  1. looks the needed pages up in the local page table (CAM-equivalent),
+  1. looks the needed pages up in the local page table — the shared
+     *residency plane* (``repro.core.residency``): the same tier
+     state/primitives and the same replacement-policy registry (LRU /
+     FIFO / RRIP / dirty-averse, ``KVStoreConfig.policy``) the
+     simulator's per-unit tables run on, here as one fully-associative
+     set (ways = pool slots),
   2. serves misses through the *sub-block plane* (single-token critical
      fetch, `kernels.paged_gather`) immediately,
   3. schedules *page plane* migrations through the shared movement fabric
@@ -80,7 +85,7 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import bandwidth, compute_plane, fabric
+from repro.core import bandwidth, compute_plane, fabric, residency
 from repro.core.engine import (EngineState, find, gate_tree as _gate_tree,
                                init_engine_state, note_dirty_eviction,
                                poll_arrivals, retire_arrivals,
@@ -106,6 +111,22 @@ class KVStoreConfig:
     selection: bool = True        # §4.2 adaptive granularity (else both)
     adaptive_ratio: bool = False  # §4.1 ratio as adapted fabric state
     fabric: FabricConfig = FabricConfig()  # modules + placement
+    policy: str = "lru"           # pool replacement (residency.POLICIES)
+
+    def __post_init__(self):
+        if self.policy not in residency.POLICIES:
+            raise ValueError(f"policy must be one of "
+                             f"{tuple(residency.POLICIES)}, "
+                             f"got {self.policy!r}")
+
+    def policy_flags(self) -> residency.PolicyFlags:
+        return residency.as_policy(self.policy)
+
+
+def _flat(tbl: jnp.ndarray) -> jnp.ndarray:
+    """Collapse a fully-associative residency leaf's (1, N) table axes to
+    the store's historical flat (N,) slot view (batch axes preserved)."""
+    return tbl.reshape(tbl.shape[:-2] + (-1,))
 
 
 class SeqState(NamedTuple):
@@ -115,13 +136,26 @@ class SeqState(NamedTuple):
     # local pool: (N, page, KV, D) x2 (k, v)
     kpool: jnp.ndarray
     vpool: jnp.ndarray
-    # local page table: remote page id resident in each slot (-1 empty)
-    slot_page: jnp.ndarray        # (N,) int32
-    slot_age: jnp.ndarray         # (N,) f32 (LRU clock)
-    slot_dirty: jnp.ndarray       # (N,) bool — locally written KV page
+    # local page table: the shared residency tier (repro.core.residency)
+    # as ONE fully-associative set — leaves (1, N); slot j == way j
+    res: residency.ResidencyState
     # DaeMon movement plane (inflight page + sub-block CAMs, §4.2)
     eng: EngineState
     stats: dict
+
+    # flat (N,) views of the tier metadata (the store's historical slot
+    # layout — callers and ledger readers keep indexing by pool slot)
+    @property
+    def slot_page(self) -> jnp.ndarray:
+        return _flat(self.res.page)
+
+    @property
+    def slot_age(self) -> jnp.ndarray:
+        return _flat(self.res.age)
+
+    @property
+    def slot_dirty(self) -> jnp.ndarray:
+        return _flat(self.res.dirty)
 
 
 class KVStoreState(NamedTuple):
@@ -190,7 +224,7 @@ class ReplicatedKVStoreState(NamedTuple):
 
 STAT_KEYS = ("sub_block_fetches", "page_moves", "wire_bytes",
              "uncompressed_bytes", "local_hits", "requests", "stall_steps",
-             "writeback_bytes", "dirty_evicts")
+             "writeback_bytes", "dirty_evicts", "evictions")
 
 
 def _init_seq(cfg: KVStoreConfig) -> SeqState:
@@ -199,9 +233,7 @@ def _init_seq(cfg: KVStoreConfig) -> SeqState:
     return SeqState(
         kpool=jnp.zeros(shape, jnp.bfloat16),
         vpool=jnp.zeros(shape, jnp.bfloat16),
-        slot_page=jnp.full((n,), -1, jnp.int32),
-        slot_age=jnp.zeros((n,), F32),
-        slot_dirty=jnp.zeros((n,), bool),
+        res=residency.init_residency(1, n),
         eng=init_engine_state(cfg.daemon),
         stats={k: jnp.zeros((), F32) for k in STAT_KEYS},
     )
@@ -291,9 +323,9 @@ def page_cost_steps(cfg: KVStoreConfig) -> int:
 
 
 # ------------------------------------------------------------ landing
-def _land(seq: SeqState, cfg: KVStoreConfig, remote_k, remote_v, clock
-          ) -> Tuple[SeqState, jnp.ndarray]:
-    """Land arrived pages into LRU victim slots.
+def _land(seq: SeqState, cfg: KVStoreConfig, remote_k, remote_v, clock,
+          pol: residency.PolicyFlags) -> Tuple[SeqState, jnp.ndarray]:
+    """Land arrived pages into the replacement policy's victim slots.
 
     Returns (seq', evicted) where `evicted` (k_land,) int32 holds the
     page ids of locally-written (dirty) pages this landing evicted from
@@ -308,8 +340,9 @@ def _land(seq: SeqState, cfg: KVStoreConfig, remote_k, remote_v, clock
     skipped (`lax.cond`) on the common steady-state steps where nothing
     arrives (under the batched path's `vmap` the cond lowers to a select,
     so there it costs one bounded gather per step). The j-th landed entry
-    (slot order) takes the j-th lowest-age victim — the sequential
-    argmin-with-updates order of a per-slot scan.
+    (slot order) takes the j-th slot of the policy's eviction order
+    (`residency.evict_order` — under LRU the lowest-age victims, the
+    sequential argmin-with-updates order of a per-slot scan).
 
     More than N pages landing on one step (possible with a wide fabric
     and budgets >= page_tokens) lands the first N in slot order; the
@@ -332,20 +365,25 @@ def _land(seq: SeqState, cfg: KVStoreConfig, remote_k, remote_v, clock
             seq.kpool.dtype)
         page_v = ops.paged_gather(remote_v, jnp.maximum(pids, 0)).astype(
             seq.vpool.dtype)
-        victims = jnp.argsort(seq.slot_age, stable=True)[:k_land]
-        evicted = jnp.where(
-            do & seq.slot_dirty[victims] & (seq.slot_page[victims] >= 0),
-            seq.slot_page[victims], no_evict)
+        victims = residency.evict_order(seq.res, pol)[:k_land]
+        resident = seq.slot_page[victims] >= 0
+        evicted = jnp.where(do & seq.slot_dirty[victims] & resident,
+                            seq.slot_page[victims], no_evict)
 
         def put(tbl, val):
             gate = do.reshape((-1,) + (1,) * (tbl.ndim - 1))
             return tbl.at[victims].set(jnp.where(gate, val, tbl[victims]))
 
+        # a freshly landed page is a clean remote copy (dirty=False)
+        res = residency.insert(seq.res, jnp.zeros_like(victims), victims,
+                               pids, now=clock, ready=clock, dirty=False,
+                               gate=do)
+        stats = {**seq.stats,
+                 "evictions": seq.stats["evictions"]
+                 + jnp.sum(do & resident)}
         return seq._replace(
-            slot_page=put(seq.slot_page, pids),
-            slot_age=put(seq.slot_age, jnp.broadcast_to(clock, (k_land,))),
-            # a freshly landed page is a clean remote copy
-            slot_dirty=put(seq.slot_dirty, jnp.zeros((k_land,), bool)),
+            res=res,
+            stats=stats,
             kpool=put(seq.kpool, page_k),
             vpool=put(seq.vpool, page_v),
         ), evicted
@@ -358,22 +396,28 @@ def _land(seq: SeqState, cfg: KVStoreConfig, remote_k, remote_v, clock
 
 
 # ------------------------------------------------------------- lookup
-def _lookup(seq: SeqState, clock, needed_pages, needed_writes):
+def _lookup(seq: SeqState, clock, needed_pages, needed_writes,
+            pol: residency.PolicyFlags):
     """Vectorized CAM lookup + local-pool serve — after landing, so a page
-    that arrives this step hits immediately (desim: tbl_valid <= t_issue).
-    `needed_writes` marks requests that WRITE their page (KV append):
-    a written resident page turns dirty — its eventual eviction owes a
-    writeback (scatter-max: duplicate slots OR their write flags).
+    that arrives this step hits immediately (the residency tier's `ready`
+    in-flight tag, desim's tbl_valid <= t_issue). `needed_writes` marks
+    requests that WRITE their page (KV append): a written resident page
+    turns dirty — its eventual eviction owes a writeback (scatter-max:
+    duplicate slots OR their write flags). The hit-time age refresh is
+    policy-gated (`residency.touch`): LRU refreshes, FIFO keeps insert
+    order.
     """
-    eq = seq.slot_page[None, :] == needed_pages[:, None]     # (R, N)
-    local_hit = jnp.any(eq, axis=1)
-    slot = jnp.argmax(eq, axis=1)
+    present, set_idx, slot, ready_ok = residency.lookup(seq.res,
+                                                        needed_pages,
+                                                        clock)
+    local_hit = present & ready_ok
     k_local = ops.paged_gather(seq.kpool, jnp.maximum(slot, 0))
     v_local = ops.paged_gather(seq.vpool, jnp.maximum(slot, 0))
-    slot_age = seq.slot_age.at[slot].max(jnp.where(local_hit, clock, 0.0))
-    slot_dirty = seq.slot_dirty.at[slot].max(local_hit & needed_writes)
-    return (seq._replace(slot_age=slot_age, slot_dirty=slot_dirty),
-            k_local, v_local, local_hit)
+    res = residency.touch(seq.res, set_idx, slot, clock, pol,
+                          gate=local_hit)
+    res = residency.mark_dirty(res, set_idx, slot, needed_writes,
+                               gate=local_hit)
+    return seq._replace(res=res), k_local, v_local, local_hit
 
 
 def _remote_fetch(remote_k, remote_v, pages_flat, any_miss):
@@ -551,6 +595,7 @@ def _schedule(seq: SeqState, fab: FabricState, cfg: KVStoreConfig,
         "stall_steps": stt["stall_steps"] + jnp.mean(stalls),
         "writeback_bytes": stt["writeback_bytes"] + n_wb * page_wire,
         "dirty_evicts": stt["dirty_evicts"] + n_wb,
+        "evictions": stt["evictions"],     # accrued at landing (_land)
     }
     return seq._replace(eng=eng, stats=stats), fab, nic
 
@@ -567,10 +612,19 @@ def _writes_or_zero(needed_pages, needed_writes):
     return jnp.asarray(needed_writes, bool)
 
 
+def _policy_or_cfg(cfg: KVStoreConfig, policy) -> residency.PolicyFlags:
+    """The steppers' replacement policy: `cfg.policy` by default, or a
+    TRACED override (PolicyFlags / PolicySpec / name) — policy flags are
+    data in the compiled step, so a policy sweep over one static config
+    reuses a single compile (the desim `policies=` lattice pattern)."""
+    return (cfg.policy_flags() if policy is None
+            else residency.as_policy(policy))
+
+
 # ------------------------------------------------------------- steppers
 def step_fetch(state: KVStoreState, cfg: KVStoreConfig,
                remote_k, remote_v, needed_pages, needed_offsets=None,
-               needed_writes=None):
+               needed_writes=None, policy=None):
     """Serve one decode step needing `needed_pages` (R,) page ids.
 
     `needed_offsets` (R,) are the requests' token offsets within their
@@ -581,6 +635,8 @@ def step_fetch(state: KVStoreState, cfg: KVStoreConfig,
     KV append of the current decode position): a written resident page
     turns dirty and owes a writeback when later evicted. Defaults to
     all-False (read-only — the pre-writeback-path behavior, unchanged).
+    `policy` optionally overrides `cfg.policy` with TRACED flags
+    (`_policy_or_cfg`) — a policy sweep reuses one compile per config.
 
     Returns (state, k (R,page,KV,D), v, served_local (R,) bool).
     Misses are served via the sub-block plane from the remote tier now;
@@ -592,10 +648,11 @@ def step_fetch(state: KVStoreState, cfg: KVStoreConfig,
     """
     offs = _offsets_or_zero(needed_pages, needed_offsets)
     writes = _writes_or_zero(needed_pages, needed_writes)
+    pol = _policy_or_cfg(cfg, policy)
     clock = state.clock + 1.0
-    seq, evicted = _land(state.seq, cfg, remote_k, remote_v, clock)
+    seq, evicted = _land(state.seq, cfg, remote_k, remote_v, clock, pol)
     seq, k_local, v_local, local_hit = _lookup(seq, clock, needed_pages,
-                                               writes)
+                                               writes, pol)
     k_remote, v_remote = _remote_fetch(remote_k, remote_v, needed_pages,
                                        jnp.any(~local_hit))
     sel = local_hit[:, None, None, None]
@@ -608,7 +665,7 @@ def step_fetch(state: KVStoreState, cfg: KVStoreConfig,
 
 def step_fetch_batch(state: BatchedKVStoreState, cfg: KVStoreConfig,
                      remote_k, remote_v, needed_pages, needed_offsets=None,
-                     needed_writes=None):
+                     needed_writes=None, policy=None):
     """Serve one decode step for a whole batch: `needed_pages` (B, R).
 
     Landing, lookup and the local serve are `vmap`ped across the B
@@ -623,11 +680,13 @@ def step_fetch_batch(state: BatchedKVStoreState, cfg: KVStoreConfig,
     b, r = needed_pages.shape
     offs = _offsets_or_zero(needed_pages, needed_offsets)
     writes = _writes_or_zero(needed_pages, needed_writes)
+    pol = _policy_or_cfg(cfg, policy)
     clock = state.clock + 1.0
     seqs, evicted = jax.vmap(
-        lambda s: _land(s, cfg, remote_k, remote_v, clock))(state.seqs)
+        lambda s: _land(s, cfg, remote_k, remote_v, clock, pol))(
+            state.seqs)
     seqs, k_local, v_local, local_hit = jax.vmap(
-        lambda s, need, wr: _lookup(s, clock, need, wr))(
+        lambda s, need, wr: _lookup(s, clock, need, wr, pol))(
             seqs, needed_pages, writes)
     k_remote, v_remote = _remote_fetch(remote_k, remote_v,
                                        needed_pages.reshape(-1),
@@ -653,7 +712,7 @@ def step_fetch_batch(state: BatchedKVStoreState, cfg: KVStoreConfig,
 def step_fetch_replicated(state: ReplicatedKVStoreState,
                           cfg: KVStoreConfig, remote_k, remote_v,
                           needed_pages, needed_offsets=None,
-                          needed_writes=None):
+                          needed_writes=None, policy=None):
     """Serve one decode step for C replicas x B tenants:
     `needed_pages` (C, B, R) (replica-major, matching the state layout).
 
@@ -678,12 +737,14 @@ def step_fetch_replicated(state: ReplicatedKVStoreState,
                                  (c * b, r)))
     cus = jnp.arange(c * b, dtype=jnp.int32) // b    # owning replica
     active = c > 1
+    pol = _policy_or_cfg(cfg, policy)
     clock = state.clock + 1.0
     seqs, evicted = jax.vmap(
-        lambda s: _land(s, cfg, remote_k, remote_v, clock))(state.seqs)
+        lambda s: _land(s, cfg, remote_k, remote_v, clock, pol))(
+            state.seqs)
     seqs, k_local, v_local, local_hit = jax.vmap(
-        lambda s, need, wr: _lookup(s, clock, need, wr))(seqs, flat,
-                                                         writes)
+        lambda s, need, wr: _lookup(s, clock, need, wr, pol))(seqs, flat,
+                                                              writes)
     k_remote, v_remote = _remote_fetch(remote_k, remote_v,
                                        flat.reshape(-1),
                                        jnp.any(~local_hit))

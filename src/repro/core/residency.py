@@ -1,0 +1,281 @@
+"""Residency plane: the ONE local-memory tier shared by desim and the store.
+
+Local memory is the tier whose capacity pressure *causes* every byte of
+data movement in a disaggregated system — the surveys (Maruf & Chowdhury
+2023; Ewais & Chow 2024) call the local:remote capacity ratio the defining
+constraint of disaggregated racks, and the paper's own local-memory
+results (fig 16 LRU-vs-FIFO, the 20% ratio of §6, graceful degradation as
+local memory shrinks) all hang off it. This module is the only home of
+that tier's arithmetic:
+
+  * ``ResidencyState`` — a set-associative page table (``sets x ways``;
+    fully-associative is one set of N ways) with, per slot: the resident
+    page id, a policy age clock, a ``ready`` time (the in-flight tag: a
+    slot whose page has been inserted but not yet landed has
+    ``ready > now`` — desim's ``tbl_valid``), a dirty bit, and an
+    RRIP re-reference prediction value.
+  * primitives — ``lookup`` / ``lookup_one`` (CAM probe + readiness),
+    ``insert`` (victim fill), ``touch`` (hit-time policy refresh),
+    ``mark_dirty`` (write-hit propagation), ``evict_victim`` /
+    ``evict_order`` (policy-scored victim selection). Every mutation of
+    tier metadata goes through these; callers may *read* fields freely.
+  * the replacement-policy registry — ``POLICIES`` (lru / fifo / rrip /
+    dirty-averse) expressed as **traceable** ``PolicyFlags`` (jnp leaves,
+    the ``TraceableFlags`` pattern): victim scoring and hit-refresh are
+    ``where``-selected on the flags, never Python-branched, so policy
+    variants ride a compiled lattice as data — ``desim.simulate_lattice
+    (policies=...)`` runs schemes x nets x policies as ONE program.
+
+Bit-identity contract (pinned by the seed golden + the store C=1/B=1
+tests): under the ``lru`` flags every primitive reproduces the arithmetic
+both planes used before the unification — ``evict_victim`` is
+``argmin(age)`` (the score adds an exact 0.0), ``evict_order`` is the
+stable age argsort, ``touch`` is the scatter-max age refresh, and the
+``rrpv`` plane is carried but never read. ``fifo`` gates the refresh off
+(identical to desim's old static ``if not cfg.fifo`` skip). See
+DESIGN.md §8.
+
+Policy semantics:
+
+  lru          — insert at `now`, refresh age on every hit; victim is the
+                 least-recently-touched slot.
+  fifo         — insert at `now`, never refresh; victim is the oldest
+                 *insertion* (fig 16).
+  rrip         — RRIP-style re-reference prediction: slots carry an RRPV
+                 (empty 3, insert 2 = "long re-reference", hit promotes
+                 to 0); the victim is the highest-RRPV slot, age-ordered
+                 within a class. Static-RRIP's aging sweep is replaced by
+                 the age tie-break — scan-resistant (unhit streaming
+                 inserts are evicted before hit-proven residents) without
+                 extra state transitions.
+  dirty-averse — LRU whose victim score pushes dirty slots behind every
+                 clean slot (writeback-cost-aware selection): a clean
+                 page is evicted for free, a dirty one owes a writeback
+                 on the reverse channel. Falls back to pure LRU order
+                 when the whole set is dirty.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+BIG = jnp.float32(3.0e38)
+
+RRPV_MAX = 3.0      # empty slots: evict-first
+RRPV_INSERT = 2.0   # "long re-reference" insertion prediction
+RRPV_HIT = 0.0      # re-referenced: protect
+
+
+# ---------------------------------------------------------------- policies
+@dataclass(frozen=True)
+class PolicySpec:
+    """Registry entry (static Python) — the human-facing policy handle."""
+    name: str
+    touch_refresh: bool = True     # refresh age on hit (LRU); FIFO: False
+    dirty_penalty: float = 0.0     # >0: dirty slots outlive clean ones
+    rrip: bool = False             # RRPV-scored victim selection
+
+
+class PolicyFlags(NamedTuple):
+    """PolicySpec as traced array leaves (`name` dropped). Stack these to
+    vmap over the policy axis of a compiled lattice."""
+    touch_refresh: jnp.ndarray
+    dirty_penalty: jnp.ndarray
+    rrip: jnp.ndarray
+
+
+POLICIES = {
+    "lru": PolicySpec("lru"),
+    "fifo": PolicySpec("fifo", touch_refresh=False),
+    "rrip": PolicySpec("rrip", rrip=True),
+    "dirty-averse": PolicySpec("dirty-averse", dirty_penalty=1.0),
+}
+
+
+def as_policy(pol) -> PolicyFlags:
+    """PolicySpec or name -> PolicyFlags (idempotent on PolicyFlags)."""
+    if isinstance(pol, PolicyFlags):
+        return pol
+    if isinstance(pol, str):
+        pol = POLICIES[pol]
+    return PolicyFlags(
+        touch_refresh=jnp.asarray(pol.touch_refresh, bool),
+        dirty_penalty=jnp.asarray(pol.dirty_penalty, F32),
+        rrip=jnp.asarray(pol.rrip, bool))
+
+
+def stack_policies(pols: Sequence) -> PolicyFlags:
+    """Stack policies along a leading axis (the lattice's policy axis)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs),
+                        *[as_policy(p) for p in pols])
+
+
+# ------------------------------------------------------------------- state
+class ResidencyState(NamedTuple):
+    """Set-associative local-memory page table. All leaves (S, W);
+    callers carrying one table per compute unit / tenant stack a leading
+    axis (`compute_plane.replicate` / vmap) like any pytree."""
+    page: jnp.ndarray    # (S, W) int32 — resident/inserted page id, -1 empty
+    age: jnp.ndarray     # (S, W) f32   — policy clock (insert / touch time)
+    ready: jnp.ndarray   # (S, W) f32   — arrival time (in-flight tag);
+    #                                     BIG until a page is inserted
+    dirty: jnp.ndarray   # (S, W) bool  — locally-written resident page
+    rrpv: jnp.ndarray    # (S, W) f32   — re-reference prediction value
+
+
+def init_residency(sets: int, ways: int) -> ResidencyState:
+    return ResidencyState(
+        page=jnp.full((sets, ways), -1, jnp.int32),
+        age=jnp.zeros((sets, ways), F32),
+        ready=jnp.full((sets, ways), BIG, F32),
+        dirty=jnp.zeros((sets, ways), bool),
+        rrpv=jnp.full((sets, ways), RRPV_MAX, F32),
+    )
+
+
+def num_sets(res: ResidencyState) -> int:
+    return res.page.shape[-2]
+
+
+def geometry(n_pages: int, local_frac: float, ways: int) -> int:
+    """Capacity arithmetic -> number of sets: the local tier holds
+    ``local_frac`` of an ``n_pages`` footprint, at least one full set
+    (desim's seed sizing, now the shared rule for capacity sweeps)."""
+    cap = max(ways, int(n_pages * local_frac))
+    return max(1, cap // ways)
+
+
+def capacity(res: ResidencyState) -> int:
+    return res.page.shape[-2] * res.page.shape[-1]
+
+
+def occupancy(res: ResidencyState) -> jnp.ndarray:
+    """Resident (inserted) slot count — never exceeds `capacity`."""
+    return jnp.sum(res.page >= 0)
+
+
+# ------------------------------------------------------------------ lookup
+def set_index(res: ResidencyState, page) -> jnp.ndarray:
+    """page id -> set (low-order index bits; S=1 maps everything to 0)."""
+    return jnp.asarray(page, jnp.int32) % num_sets(res)
+
+
+def lookup_one(res: ResidencyState, set_idx, page, now
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Probe one set for `page` -> (present, way, ready_ok).
+
+    `present` is the CAM match; `ready_ok` is the in-flight tag check
+    (the slot's data has landed by `now`). A present-but-not-ready slot
+    is desim's tag-present access: the page is already moving."""
+    row = res.page[set_idx]
+    hit_vec = row == page
+    present = jnp.any(hit_vec)
+    way = jnp.argmax(hit_vec)
+    ready_ok = res.ready[set_idx, way] <= now
+    return present, way, ready_ok
+
+
+def lookup(res: ResidencyState, pages, now
+           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Vectorized probe for (R,) page ids -> (present, set_idx, way,
+    ready_ok), each (R,). The store's CAM-equivalent batch lookup; with
+    S=1 this is exactly the seed's flat ``slot_page == pages`` test."""
+    pages = jnp.asarray(pages, jnp.int32)
+    set_idx = set_index(res, pages)
+    rows = res.page[set_idx]                       # (R, W)
+    hit_vec = rows == pages[:, None]
+    present = jnp.any(hit_vec, axis=1)
+    way = jnp.argmax(hit_vec, axis=1)
+    ready_ok = res.ready[set_idx, way] <= now
+    return present, set_idx, way, ready_ok
+
+
+# ----------------------------------------------------------------- mutation
+def touch(res: ResidencyState, set_idx, way, now, pol: PolicyFlags, *,
+          gate) -> ResidencyState:
+    """Hit-time policy refresh at (set_idx, way) — scalar or vector.
+
+    Age refreshes to `now` when the policy says so (`touch_refresh` —
+    LRU yes, FIFO no); the RRPV promotes to 0 on any gated hit. Scatter
+    semantics are max/min so duplicate vector indices and un-gated lanes
+    are no-ops (the seed store's `.at[slot].max` arithmetic)."""
+    pol = as_policy(pol)
+    do = jnp.asarray(gate, bool)
+    age = res.age.at[set_idx, way].max(
+        jnp.where(do & pol.touch_refresh, jnp.asarray(now, F32), 0.0))
+    rrpv = res.rrpv.at[set_idx, way].min(
+        jnp.where(do, RRPV_HIT, RRPV_MAX))
+    return res._replace(age=age, rrpv=rrpv)
+
+
+def mark_dirty(res: ResidencyState, set_idx, way, write, *,
+               gate) -> ResidencyState:
+    """OR a write flag into the dirty bit at (set_idx, way) (scalar or
+    vector; scatter-max, so duplicates/un-gated lanes are no-ops)."""
+    return res._replace(
+        dirty=res.dirty.at[set_idx, way].max(
+            jnp.asarray(gate, bool) & jnp.asarray(write, bool)))
+
+
+def insert(res: ResidencyState, set_idx, way, page, *, now, ready, dirty,
+           gate) -> ResidencyState:
+    """Fill victim slot(s) with `page` (scalar indices, or vectors of
+    UNIQUE (set, way) pairs — `evict_order` prefixes qualify). Age is the
+    insert time, `ready` the (possibly future) arrival time — the
+    in-flight tag — and the RRPV resets to the long-re-reference
+    insertion prediction."""
+    gate = jnp.asarray(gate, bool)
+
+    def put(tbl, val):
+        cur = tbl[set_idx, way]
+        return tbl.at[set_idx, way].set(
+            jnp.where(gate, jnp.broadcast_to(val, cur.shape), cur))
+
+    return ResidencyState(
+        page=put(res.page, jnp.asarray(page, jnp.int32)),
+        age=put(res.age, jnp.asarray(now, F32)),
+        ready=put(res.ready, jnp.asarray(ready, F32)),
+        dirty=put(res.dirty, jnp.asarray(dirty, bool)),
+        rrpv=put(res.rrpv, jnp.asarray(RRPV_INSERT, F32)),
+    )
+
+
+# ---------------------------------------------------------- victim scoring
+def _score(age, dirty, rrpv, pol: PolicyFlags) -> jnp.ndarray:
+    """Per-slot eviction score (lower = evicted first), `where`-selected
+    on the traced policy flags so every policy shares one compiled
+    program:
+
+      time policies: score = age + dirty * dirty_penalty * span
+        (span = the set's age spread + 1, so penalty 1.0 lexicographically
+        orders every clean slot before any dirty one; penalty 0.0 adds an
+        exact float 0.0 — bit-identical to raw LRU/FIFO age order).
+      rrip: score = (RRPV_MAX - rrpv) * span + (age - min_age)
+        (higher RRPV evicted first; age breaks ties within a class).
+    """
+    amin = jnp.min(age)
+    span = jnp.max(age) - amin + 1.0
+    base = age + jnp.where(dirty, pol.dirty_penalty * span, 0.0)
+    rr = (RRPV_MAX - rrpv) * span + (age - amin)
+    return jnp.where(pol.rrip, rr, base)
+
+
+def evict_victim(res: ResidencyState, set_idx, pol: PolicyFlags
+                 ) -> jnp.ndarray:
+    """Victim way within one set (desim's per-request eviction)."""
+    pol = as_policy(pol)
+    return jnp.argmin(_score(res.age[set_idx], res.dirty[set_idx],
+                             res.rrpv[set_idx], pol))
+
+
+def evict_order(res: ResidencyState, pol: PolicyFlags) -> jnp.ndarray:
+    """All ways of a FULLY-ASSOCIATIVE tier (S=1) in eviction order —
+    the store's multi-victim landing takes the first k. Stable, so equal
+    scores keep slot order (the seed's stable age argsort)."""
+    pol = as_policy(pol)
+    return jnp.argsort(_score(res.age[0], res.dirty[0], res.rrpv[0], pol),
+                       stable=True)

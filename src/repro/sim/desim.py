@@ -2,7 +2,11 @@
 
 The paper evaluates with a heavily modified Sniper; the reproducible
 equivalent on a CPU-only box is a request-level DES replaying LLC-miss
-traces through: local memory (set-assoc, LRU/FIFO), the DaeMon engines
+traces through: local memory (the shared residency plane,
+``repro.core.residency``: one set-associative page table per compute
+unit with policy-scored eviction — LRU / FIFO / RRIP / dirty-averse from
+the traceable ``residency.POLICIES`` registry, the same tier arithmetic
+the serving store's pool runs on), the DaeMon engines
 (inflight buffers + selection unit from ``repro.core.engine``), and the
 shared movement fabric (``repro.core.fabric``): per-module partitioned
 virtual channels over the network and the remote-memory bus — each
@@ -38,11 +42,15 @@ static Python: every scheme switch in the per-request transition is a
 (the partition ratio is carried per-module state in the fabric, updated by
 ``bandwidth.adapt_ratio`` only when the `adaptive` flag is set) — so
 ``simulate_lattice`` runs the whole scheme x network x bw-ratio x
-link-profile x compute-unit lattice as ONE compiled program ``vmap``ped
-over all three axes — one jit trace per (trace shape, footprint,
-SimConfig, schedule knot count, active-C count) instead of one per
-scheme, profile, or unit count. ``simulate_grid`` is the single-scheme
-wrapper kept for paired baseline/variant comparisons.
+link-profile x compute-unit x replacement-policy lattice as ONE compiled
+program ``vmap``ped over every axis — one jit trace per (trace shape,
+footprint, SimConfig, schedule knot count, active-C count, policy count)
+instead of one per scheme, profile, unit count, or policy.
+``simulate_grid`` is the single-scheme wrapper kept for paired
+baseline/variant comparisons. Replacement policies are
+``residency.PolicyFlags`` pytrees (``simulate_lattice(policies=...)``);
+``SimConfig.fifo`` survives only as a deprecated alias for the default
+policy (``fifo=True`` == ``policies=[POLICIES['fifo']]``, pinned).
 
 Fidelity notes (vs the paper's cycle-accurate setup) are in DESIGN.md.
 """
@@ -56,12 +64,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bandwidth, compute_plane, fabric
+from repro.core import bandwidth, compute_plane, fabric, residency
 from repro.core.engine import (EngineState, gate_tree as _gate_tree,
                                init_engine_state, find, retire_arrivals,
                                schedule_line, schedule_page,
                                select_granularity, utilization)
 from repro.core.params import DaemonParams, NetworkParams
+from repro.core.residency import POLICIES, ResidencyState
 from repro.sim.schemes import SchemeFlags, as_traceable, stack_flags
 from repro.sim.trace import Trace
 
@@ -75,7 +84,12 @@ MLP_W = 16
 class SimConfig:
     daemon: DaemonParams = DaemonParams()
     local_frac: float = 0.20      # local memory holds ~20% of the footprint
-    fifo: bool = False            # FIFO instead of LRU (fig 16)
+    # DEPRECATED: alias for the residency plane's policy registry — maps
+    # to POLICIES["fifo"] / POLICIES["lru"] when no explicit policy is
+    # given (`default_policy`). New callers pass `policies=` to
+    # `simulate_lattice` / `policy=` to `run_trace` instead; equivalence
+    # is pinned by tests/test_residency.py.
+    fifo: bool = False
     num_mc: int = 1               # memory components (fig 17/22)
     mlp: int = MLP_W
     placement: str = "interleave"  # page->module policy (fabric.PLACEMENTS)
@@ -92,6 +106,10 @@ class SimConfig:
     def compute_config(self) -> compute_plane.ComputePlaneConfig:
         return compute_plane.ComputePlaneConfig(num_units=self.num_cu)
 
+    def default_policy(self) -> residency.PolicySpec:
+        """The `SimConfig.fifo` alias mapping (deprecation shim)."""
+        return POLICIES["fifo" if self.fifo else "lru"]
+
 
 class SimState(NamedTuple):
     """Per-compute-unit leaves carry a leading (C,) axis (C = num_cu);
@@ -99,10 +117,7 @@ class SimState(NamedTuple):
     `nic` is the compute-side per-unit channel bank."""
     t: jnp.ndarray               # (C,) per-unit core clock
     ring: jnp.ndarray            # (C, W) outstanding completions per unit
-    tbl_page: jnp.ndarray        # (C, SETS, WAYS) int32
-    tbl_age: jnp.ndarray         # (C, SETS, WAYS) f32
-    tbl_valid: jnp.ndarray       # (C, SETS, WAYS) f32 (page arrival time)
-    tbl_dirty: jnp.ndarray       # (C, SETS, WAYS) bool
+    res: ResidencyState          # local-memory tier, leaves (C, SETS, WAYS)
     eng: EngineState             # leaves (C, ...): one engine per unit
     net: fabric.FabricState      # network-link channel bank (M modules)
     mem: fabric.FabricState      # remote-memory bus channel bank
@@ -112,7 +127,7 @@ class SimState(NamedTuple):
 
 STAT_KEYS = ("i", "n", "hits", "lat_sum", "pages_moved", "lines_moved",
              "net_bytes", "wb_bytes", "served_line", "served_page",
-             "page_drops", "dirty_evicts")
+             "page_drops", "dirty_evicts", "evictions")
 
 
 def _net_link(net) -> fabric.LinkModel:
@@ -124,8 +139,7 @@ def _net_link(net) -> fabric.LinkModel:
 
 
 def _init_state(cfg: SimConfig, n_pages: int, net, ratio0) -> SimState:
-    cap = max(WAYS, int(n_pages * cfg.local_frac))
-    sets = max(1, cap // WAYS)
+    sets = residency.geometry(n_pages, cfg.local_frac, WAYS)
     c = cfg.num_cu
     fcfg = cfg.fabric_config()
     # the remote-memory bus is a constant link (the paper's variability
@@ -136,10 +150,8 @@ def _init_state(cfg: SimConfig, n_pages: int, net, ratio0) -> SimState:
     return SimState(
         t=jnp.zeros((c,), F32),
         ring=jnp.zeros((c, cfg.mlp), F32),
-        tbl_page=jnp.full((c, sets, WAYS), -1, jnp.int32),
-        tbl_age=jnp.zeros((c, sets, WAYS), F32),
-        tbl_valid=jnp.full((c, sets, WAYS), BIG, F32),
-        tbl_dirty=jnp.zeros((c, sets, WAYS), bool),
+        res=compute_plane.replicate(residency.init_residency(sets, WAYS),
+                                    c),
         eng=compute_plane.replicate(init_engine_state(cfg.daemon), c),
         net=fabric.init_fabric(fcfg, link=net_link, ratio=ratio0),
         mem=fabric.init_fabric(fcfg, link=mem_link, ratio=ratio0),
@@ -150,15 +162,20 @@ def _init_state(cfg: SimConfig, n_pages: int, net, ratio0) -> SimState:
 
 
 def make_step(flags, cfg: SimConfig, net, comp_ratio, warm_after,
-              active_cu=1):
+              active_cu=1, policy=None):
     """Per-request transition. `flags` may be a SchemeFlags (converted) or
     a TraceableFlags pytree — possibly traced, so every scheme switch
     below is `where`-gated and one compiled step serves any scheme. `net`
     (latencies; the link itself rides in the fabric state), `comp_ratio`,
-    `warm_after` and `active_cu` (how many of the `cfg.num_cu` envelope
-    units receive requests — the compute-scaling lattice axis) are closed
-    over — traced per lattice point, never broadcast per request."""
+    `warm_after`, `active_cu` (how many of the `cfg.num_cu` envelope
+    units receive requests — the compute-scaling lattice axis) and
+    `policy` (a `residency` replacement policy — PolicyFlags pytree,
+    PolicySpec, or name; defaults to the `SimConfig.fifo` alias) are
+    closed over — traced per lattice point, never broadcast per
+    request."""
     fl = as_traceable(flags)
+    pol = residency.as_policy(cfg.default_policy() if policy is None
+                              else policy)
     dp = cfg.daemon
     comp_lat = dp.compress_latency_ns
     line_b = float(dp.line_bytes)
@@ -176,7 +193,6 @@ def make_step(flags, cfg: SimConfig, net, comp_ratio, warm_after,
 
     def step(st: SimState, inp):
         page, off, gap, wr = inp
-        sets = st.tbl_page.shape[1]
         want_page = (fl.move_pages | fl.page_free) & fl.use_local_mem
 
         # ---- compute-unit sharding (page-hash -> per-unit streams over
@@ -184,10 +200,7 @@ def make_step(flags, cfg: SimConfig, net, comp_ratio, warm_after,
         cu = compute_plane.shard_unit(page, active_cu)
         nic_on = active_cu > 1            # NIC leg gate (idle at C=1)
         ring_u = st.ring[cu]
-        tbl_page_u = st.tbl_page[cu]
-        tbl_age_u = st.tbl_age[cu]
-        tbl_valid_u = st.tbl_valid[cu]
-        tbl_dirty_u = st.tbl_dirty[cu]
+        res_u = compute_plane.unit_slice(st.res, cu)
         eng = compute_plane.unit_slice(st.eng, cu)
 
         # ---- core issue (MLP window, per-unit clock + ring) ----
@@ -195,16 +208,12 @@ def make_step(flags, cfg: SimConfig, net, comp_ratio, warm_after,
         slot = jnp.argmin(ring_u)
         t_issue = jnp.maximum(st.t[cu] + gap, oldest)
 
-        # ---- local memory lookup (the unit's own page table) ----
-        set_idx = page % sets
-        row = tbl_page_u[set_idx]
-        hit_vec = row == page
-        present = jnp.any(hit_vec)
-        way = jnp.argmax(hit_vec)
-        valid_t = tbl_valid_u[set_idx, way]
-        is_hit = (present & (valid_t <= t_issue) & fl.use_local_mem) \
-            | fl.local_only
-        inflight_tbl = present & (valid_t > t_issue)
+        # ---- local memory lookup (the unit's own residency tier) ----
+        set_idx = residency.set_index(res_u, page)
+        present, way, ready_ok = residency.lookup_one(res_u, set_idx,
+                                                      page, t_issue)
+        is_hit = (present & ready_ok & fl.use_local_mem) | fl.local_only
+        inflight_tbl = present & ~ready_ok
 
         eng = retire_arrivals(eng, t_issue, lpp)
 
@@ -296,30 +305,25 @@ def make_step(flags, cfg: SimConfig, net, comp_ratio, warm_after,
         eng = _gate_tree(send_line & fl.move_lines, eng,
                          schedule_line(eng, page, off, line_arrival, lpp))
 
-        # ---- local table update (insert page at LRU/FIFO victim in the
-        # unit's OWN table; writeback priced on both endpoints) ----
+        # ---- residency update (insert page at the policy's victim in
+        # the unit's OWN tier; writeback priced on both endpoints) ----
         do_insert = send_page & fl.use_local_mem
-        victim = jnp.argmin(tbl_age_u[set_idx])
-        evict_page = tbl_page_u[set_idx, victim]
-        evict_dirty = tbl_dirty_u[set_idx, victim] & (evict_page >= 0)
+        victim = residency.evict_victim(res_u, set_idx, pol)
+        evict_page = res_u.page[set_idx, victim]
+        evict_dirty = res_u.dirty[set_idx, victim] & (evict_page >= 0)
         wb = do_insert & evict_dirty
         wb_bytes = jnp.where(wb, wire_b, 0.0)
         net_fab, nic_fab, _ = compute_plane.serve_writeback_two_leg(
             net_fab, nic_fab, mc, cu, t_issue, wire_b, gate=wb,
             active=nic_on)
 
-        def upd(tbl, val, gate, w):
-            return tbl.at[set_idx, w].set(
-                jnp.where(gate, val, tbl[set_idx, w]))
-
-        tbl_page = upd(tbl_page_u, page, do_insert, victim)
-        tbl_valid = upd(tbl_valid_u, page_arrival, do_insert, victim)
-        tbl_dirty = upd(tbl_dirty_u, wr, do_insert, victim)
-        tbl_age = upd(tbl_age_u, t_issue, do_insert, victim)
-        if not cfg.fifo:               # LRU refreshes on hit
-            tbl_age = upd(tbl_age, t_issue, is_hit & present, way)
-        tbl_dirty = upd(tbl_dirty, tbl_dirty[set_idx, way] | wr,
-                        is_hit & present, way)
+        res_u = residency.insert(res_u, set_idx, victim, page,
+                                 now=t_issue, ready=page_arrival,
+                                 dirty=wr, gate=do_insert)
+        res_u = residency.touch(res_u, set_idx, way, t_issue, pol,
+                                gate=is_hit & present)
+        res_u = residency.mark_dirty(res_u, set_idx, way, wr,
+                                     gate=is_hit & present)
 
         # ---- stats (warmup-gated: first `warm_after` requests excluded
         # from latency/hit accounting; total_time still covers the run) ----
@@ -350,15 +354,13 @@ def make_step(flags, cfg: SimConfig, net, comp_ratio, warm_after,
                 (~is_hit) & ~send_page & ~page_found & ~inflight_tbl
                 & want_page),
             "dirty_evicts": stt["dirty_evicts"] + wb,
+            "evictions": stt["evictions"] + (do_insert & (evict_page >= 0)),
         }
 
         new_st = SimState(
             t=st.t.at[cu].set(t_issue),
             ring=st.ring.at[cu, slot].set(done),
-            tbl_page=st.tbl_page.at[cu].set(tbl_page),
-            tbl_age=st.tbl_age.at[cu].set(tbl_age),
-            tbl_valid=st.tbl_valid.at[cu].set(tbl_valid),
-            tbl_dirty=st.tbl_dirty.at[cu].set(tbl_dirty),
+            res=compute_plane.unit_update(st.res, cu, res_u),
             eng=compute_plane.unit_update(st.eng, cu, eng),
             net=net_fab, mem=mem_fab, nic=nic_fab,
             stats=stats,
@@ -369,12 +371,14 @@ def make_step(flags, cfg: SimConfig, net, comp_ratio, warm_after,
 
 
 def _simulate_point(cfg, n_pages, flags, warm_after, trace_arrays, net,
-                    comp_ratio, active_cu):
-    """One (scheme, net, active-C) lattice point on pure arrays — the
-    vmap kernel. `active_cu` is traced (<= cfg.num_cu envelope)."""
+                    comp_ratio, active_cu, policy):
+    """One (scheme, net, active-C, policy) lattice point on pure arrays —
+    the vmap kernel. `active_cu` is traced (<= cfg.num_cu envelope);
+    `policy` is a traced residency.PolicyFlags pytree."""
     ratio0 = as_traceable(flags).bw_ratio
     st = _init_state(cfg, n_pages, net, ratio0)
-    step = make_step(flags, cfg, net, comp_ratio, warm_after, active_cu)
+    step = make_step(flags, cfg, net, comp_ratio, warm_after, active_cu,
+                     policy)
     final, _ = jax.lax.scan(step, st, trace_arrays)
     total_time = jnp.maximum(jnp.max(final.ring), jnp.max(final.t))
     s = final.stats
@@ -395,18 +399,21 @@ def _simulate_point(cfg, n_pages, flags, warm_after, trace_arrays, net,
 
 @partial(jax.jit, static_argnums=(0, 1))
 def _lattice_jit(cfg, n_pages, tflags, warm_after, trace_arrays, nets,
-                 comp_ratio, active_cus):
-    """vmap(schemes) o vmap(nets) o vmap(active-C) over `_simulate_point`,
-    jitted once per (SimConfig, footprint, trace shape, schedule knot
-    count, C-sweep length)."""
+                 comp_ratio, active_cus, policies):
+    """vmap(schemes) o vmap(nets) o vmap(active-C) o vmap(policies) over
+    `_simulate_point`, jitted once per (SimConfig, footprint, trace
+    shape, schedule knot count, C-sweep length, policy count)."""
     point = partial(_simulate_point, cfg, n_pages)
-    over_cus = jax.vmap(point, in_axes=(None, None, None, None, None, 0))
+    over_pols = jax.vmap(point, in_axes=(None, None, None, None, None,
+                                         None, 0))
+    over_cus = jax.vmap(over_pols, in_axes=(None, None, None, None, None,
+                                            0, None))
     over_nets = jax.vmap(over_cus, in_axes=(None, None, None, 0, None,
-                                            None))
+                                            None, None))
     over_schemes = jax.vmap(over_nets, in_axes=(0, None, None, None, 0,
-                                                None))
+                                                None, None))
     return over_schemes(tflags, warm_after, trace_arrays, nets, comp_ratio,
-                        active_cus)
+                        active_cus, policies)
 
 
 def lattice_cache_size() -> int:
@@ -416,9 +423,9 @@ def lattice_cache_size() -> int:
 
 def simulate_lattice(schemes, cfg: SimConfig, trace: Trace, nets,
                      comp_ratio, warm_frac: float = 0.3,
-                     active_cus=None):
-    """Every scheme x every net (x every compute-unit count) over one
-    trace in ONE compiled program.
+                     active_cus=None, policies=None):
+    """Every scheme x every net (x every compute-unit count x every
+    replacement policy) over one trace in ONE compiled program.
 
     schemes: sequence of SchemeFlags / TraceableFlags — bw-ratio and
     adaptive variants are just more entries on the scheme axis.
@@ -430,21 +437,34 @@ def simulate_lattice(schemes, cfg: SimConfig, trace: Trace, nets,
     <= cfg.num_cu, the static envelope) — the fig-22 compute-scaling
     axis. Counts are traced DATA (request->unit sharding + NIC gating),
     so a {1,2,4,8} sweep rides one compiled program like the link
-    profiles do. None (default) runs the full envelope as a single
-    squeezed point and returns [scheme][net] -> metrics dict of floats;
-    with active_cus the result is [scheme][net][c]. The jit trace is
-    cached per (SimConfig, footprint, trace shape, knot count, C-sweep
-    length), so repeated sweeps — more ratios, more networks, more
-    profiles, more unit counts — cost compile time once.
+    profiles do.
+    policies: optional sequence of residency replacement policies
+    (PolicySpec / PolicyFlags / names from `residency.POLICIES`) — the
+    fig-16 local-memory axis. Policy flags are traced DATA (victim
+    scoring and hit-refresh are `where`-selected), so an LRU / FIFO /
+    RRIP / dirty-averse sweep rides the same compiled program too. None
+    (default) runs the single `SimConfig.fifo`-aliased policy squeezed.
+
+    Result nesting: [scheme][net] -> metrics dict of floats, with a [c]
+    level appended when `active_cus` is given and a [policy] level
+    appended when `policies` is given ([scheme][net][c][policy] with
+    both). The jit trace is cached per (SimConfig, footprint, trace
+    shape, knot count, C-sweep length, policy count), so repeated
+    sweeps — more ratios, networks, profiles, unit counts, or policies —
+    cost compile time once.
     """
     schemes = list(schemes)
     if not schemes:
         raise ValueError("simulate_lattice needs at least one scheme")
     squeeze_cu = active_cus is None
     cus = [cfg.num_cu] if squeeze_cu else list(active_cus)
-    if any(c < 1 or c > cfg.num_cu for c in cus):
-        raise ValueError(f"active_cus must be within [1, num_cu="
-                         f"{cfg.num_cu}], got {cus}")
+    if not cus or any(c < 1 or c > cfg.num_cu for c in cus):
+        raise ValueError(f"active_cus must be a non-empty sequence "
+                         f"within [1, num_cu={cfg.num_cu}], got {cus}")
+    squeeze_pol = policies is None
+    pols = [cfg.default_policy()] if squeeze_pol else list(policies)
+    if not pols:
+        raise ValueError("simulate_lattice needs at least one policy")
     r = len(trace.page)
     arrays = (jnp.asarray(trace.page), jnp.asarray(trace.off),
               jnp.asarray(trace.gap), jnp.asarray(trace.wr))
@@ -455,29 +475,42 @@ def simulate_lattice(schemes, cfg: SimConfig, trace: Trace, nets,
     # up past the integer boundary and drop the boundary request)
     res = _lattice_jit(cfg, trace.n_pages, stack_flags(schemes),
                        jnp.asarray(warm_frac * r, F32), arrays, stacked,
-                       cr, jnp.asarray(cus, jnp.int32))
-    if squeeze_cu:
-        return [[{k: float(v[i, j, 0]) for k, v in res.items()}
-                 for j in range(len(nets))] for i in range(len(schemes))]
-    return [[[{k: float(v[i, j, c]) for k, v in res.items()}
-              for c in range(len(cus))]
-             for j in range(len(nets))] for i in range(len(schemes))]
+                       cr, jnp.asarray(cus, jnp.int32),
+                       residency.stack_policies(pols))
+
+    def cell(i, j, c, p):
+        return {k: float(v[i, j, c, p]) for k, v in res.items()}
+
+    def nest(i, j):
+        if squeeze_cu and squeeze_pol:
+            return cell(i, j, 0, 0)
+        if squeeze_pol:
+            return [cell(i, j, c, 0) for c in range(len(cus))]
+        if squeeze_cu:
+            return [cell(i, j, 0, p) for p in range(len(pols))]
+        return [[cell(i, j, c, p) for p in range(len(pols))]
+                for c in range(len(cus))]
+
+    return [[nest(i, j) for j in range(len(nets))]
+            for i in range(len(schemes))]
 
 
 def run_trace(scheme_flags, cfg: SimConfig, trace: Trace, net,
               comp_ratio, warm_frac: float = 0.3,
-              active_cu: int = None) -> SimState:
+              active_cu: int = None, policy=None) -> SimState:
     """Replay one trace under one scheme/net and return the final
     SimState — the state-level sibling of `simulate_grid`, for callers
-    that need the movement internals (fabric channel banks, NIC banks,
-    link model, adapted ratios, per-module/per-unit byte ledgers, engine
-    buffers) rather than the metrics dict. `active_cu` defaults to the
-    full `cfg.num_cu` envelope."""
+    that need the movement internals (residency tier, fabric channel
+    banks, NIC banks, link model, adapted ratios, per-module/per-unit
+    byte ledgers, engine buffers) rather than the metrics dict.
+    `active_cu` defaults to the full `cfg.num_cu` envelope; `policy`
+    (PolicySpec / PolicyFlags / name) to the `SimConfig.fifo` alias."""
     r = len(trace.page)
     ratio0 = as_traceable(scheme_flags).bw_ratio
     st = _init_state(cfg, trace.n_pages, net, ratio0)
     step = make_step(scheme_flags, cfg, net, comp_ratio, warm_frac * r,
-                     cfg.num_cu if active_cu is None else active_cu)
+                     cfg.num_cu if active_cu is None else active_cu,
+                     policy)
     xs = (jnp.asarray(trace.page), jnp.asarray(trace.off),
           jnp.asarray(trace.gap), jnp.asarray(trace.wr))
     final, _ = jax.lax.scan(step, st, xs)

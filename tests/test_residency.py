@@ -1,0 +1,337 @@
+"""The unified residency plane (`repro.core.residency`): policy registry
+traceability, the `SimConfig.fifo` alias pin, the schemes x nets x
+policies single-compile property, crafted victim-selection semantics for
+the new policies (RRIP / dirty-averse), the store B=1 batched pin, and
+hypothesis tier invariants on BOTH planes — occupancy never exceeds
+capacity, no duplicate resident page ids within a set, dirty bits only on
+resident slots, and every dirty eviction reaching the writeback ledger
+with exact byte conservation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st as hyp_st  # optional-hypothesis shim
+
+from repro.core import fabric, residency
+from repro.core.daemon_store import (KVStoreConfig, _wire_bytes,
+                                     init_kv_store, init_kv_store_batch,
+                                     ledger, step_fetch, step_fetch_batch)
+from repro.core.fabric import FabricConfig
+from repro.core.params import NetworkParams
+from repro.core.residency import (POLICIES, PolicyFlags, as_policy,
+                                  init_residency, stack_policies)
+from repro.sim.desim import (SimConfig, lattice_cache_size, make_net,
+                             run_trace, simulate_lattice)
+from repro.sim.schemes import SCHEMES
+from repro.sim.trace import generate_trace
+from repro.sim.workloads import WORKLOADS
+
+POLICY_NAMES = ("lru", "fifo", "rrip", "dirty-averse")
+
+
+# ------------------------------------------------------- policy registry
+def test_policy_registry_and_traceable_flags():
+    assert set(POLICY_NAMES) <= set(POLICIES)
+    fl = as_policy("lru")
+    assert isinstance(fl, PolicyFlags)
+    assert all(hasattr(l, "dtype") for l in jax.tree.leaves(fl))
+    assert as_policy(fl) is fl                       # idempotent
+    stacked = stack_policies([POLICIES[p] for p in POLICY_NAMES])
+    assert stacked.touch_refresh.shape == (len(POLICY_NAMES),)
+    assert bool(stacked.touch_refresh[0])            # lru refreshes
+    assert not bool(stacked.touch_refresh[1])        # fifo does not
+    assert bool(stacked.rrip[2])
+    assert float(stacked.dirty_penalty[3]) > 0.0
+
+
+def test_geometry_matches_seed_sizing():
+    # the seed's capacity arithmetic: >= one full set, cap // ways sets
+    assert residency.geometry(1000, 0.20, 8) == 25
+    assert residency.geometry(10, 0.20, 8) == 1
+    assert residency.capacity(init_residency(4, 8)) == 32
+
+
+# -------------------------------------------- crafted victim semantics
+def _tier(ages, dirty=None, rrpv=None, pages=None):
+    w = len(ages)
+    res = init_residency(1, w)
+    return res._replace(
+        page=jnp.asarray([pages or list(range(w))], jnp.int32),
+        age=jnp.asarray([ages], jnp.float32),
+        ready=jnp.zeros((1, w), jnp.float32),
+        dirty=jnp.asarray([dirty or [False] * w]),
+        rrpv=jnp.asarray([rrpv or [residency.RRPV_INSERT] * w],
+                         jnp.float32))
+
+
+def test_lru_victim_is_argmin_age_bitwise():
+    res = _tier([5.0, 2.0, 9.0, 2.0])
+    assert int(residency.evict_victim(res, 0, as_policy("lru"))) == 1
+    # stable order: ties keep slot order, exactly the seed age argsort
+    np.testing.assert_array_equal(
+        np.asarray(residency.evict_order(res, as_policy("lru"))),
+        np.argsort(np.asarray([5.0, 2.0, 9.0, 2.0]), kind="stable"))
+
+
+def test_dirty_averse_prefers_clean_victims():
+    res = _tier([1.0, 2.0, 3.0, 4.0], dirty=[True, True, False, False])
+    # LRU would evict slot 0 (oldest); dirty-averse takes the oldest CLEAN
+    assert int(residency.evict_victim(res, 0, as_policy("lru"))) == 0
+    assert int(residency.evict_victim(res, 0,
+                                      as_policy("dirty-averse"))) == 2
+    # all-dirty set falls back to pure age order
+    res_all = _tier([1.0, 2.0, 3.0], dirty=[True, True, True])
+    assert int(residency.evict_victim(res_all, 0,
+                                      as_policy("dirty-averse"))) == 0
+
+
+def test_rrip_protects_rereferenced_slots():
+    # slot 0 is oldest but was re-referenced (rrpv 0); slots 1/2 are
+    # newer distant-re-reference inserts — rrip evicts them first
+    res = _tier([1.0, 2.0, 3.0], rrpv=[0.0, 2.0, 2.0])
+    assert int(residency.evict_victim(res, 0, as_policy("lru"))) == 0
+    assert int(residency.evict_victim(res, 0, as_policy("rrip"))) == 1
+    # touch promotes: after a hit on slot 1 its rrpv drops to 0
+    res2 = residency.touch(res, 0, 1, 10.0, as_policy("rrip"), gate=True)
+    assert float(res2.rrpv[0, 1]) == residency.RRPV_HIT
+    assert int(residency.evict_victim(res2, 0, as_policy("rrip"))) == 2
+
+
+def test_fifo_touch_keeps_insert_order():
+    res = _tier([1.0, 2.0, 3.0])
+    lru = residency.touch(res, 0, 0, 50.0, as_policy("lru"), gate=True)
+    fifo = residency.touch(res, 0, 0, 50.0, as_policy("fifo"), gate=True)
+    assert float(lru.age[0, 0]) == 50.0
+    assert float(fifo.age[0, 0]) == 1.0
+
+
+# ---------------------------------------------------- SimConfig.fifo alias
+def test_simconfig_fifo_is_policy_alias():
+    """The deprecated `SimConfig.fifo` bool maps onto the unified policy
+    axis: fifo=True == policies=[POLICIES['fifo']] (and lru likewise),
+    metric for metric."""
+    w = WORKLOADS["bf"]
+    tr = generate_trace(w, 1500, seed=3)
+    nets = [make_net(NetworkParams())]
+    schemes = [SCHEMES["remote"], SCHEMES["daemon"]]
+    for legacy, name in ((SimConfig(fifo=True), "fifo"),
+                         (SimConfig(), "lru")):
+        ref = simulate_lattice(schemes, legacy, tr, nets, w.comp_ratio)
+        new = simulate_lattice(schemes, SimConfig(), tr, nets,
+                               w.comp_ratio,
+                               policies=[POLICIES[name]])
+        for i in range(len(schemes)):
+            for key, v in ref[i][0].items():
+                np.testing.assert_allclose(new[i][0][0][key], v,
+                                           rtol=1e-6, err_msg=(name, key))
+
+
+def test_policies_are_a_real_axis():
+    """LRU and FIFO produce different end-to-end results under genuine
+    capacity pressure (a reuse set that overflows the table — the stock
+    short traces never refill a 20% tier), and every policy yields
+    finite metrics."""
+    import dataclasses
+    w = dataclasses.replace(WORKLOADS["pr"], name="cap-test",
+                            n_pages=1024, zipf=0.9, seq_frac=0.30,
+                            lines_per_visit=6.0)
+    tr = generate_trace(w, 4000, seed=5)
+    nets = [make_net(NetworkParams())]
+    res = simulate_lattice([SCHEMES["daemon"]], SimConfig(local_frac=0.05),
+                           tr, nets, w.comp_ratio,
+                           policies=[POLICIES[p] for p in POLICY_NAMES])
+    times = [res[0][0][p]["total_time_ns"] for p in range(4)]
+    assert all(np.isfinite(t) and t > 0 for t in times)
+    assert times[0] != times[1]          # lru vs fifo actually differ
+
+
+# ------------------------------------------------------- single compile
+def test_schemes_by_policy_lattice_single_compile():
+    """schemes x nets x policies adds exactly ONE jit trace: policy
+    flags are data on the lattice's policy axis, not code."""
+    w = WORKLOADS["bc"]
+    tr = generate_trace(w, 700, seed=5)
+    nets = [make_net(NetworkParams()),
+            make_net(NetworkParams(bw_factor=8.0))]
+    schemes = [SCHEMES[s] for s in ("remote", "pq", "daemon")]
+    pols = [POLICIES[p] for p in POLICY_NAMES]
+    before = lattice_cache_size()
+    simulate_lattice(schemes, SimConfig(), tr, nets, w.comp_ratio,
+                     policies=pols)
+    assert lattice_cache_size() - before == 1
+    # different policy mix, same sweep length: still no recompile
+    simulate_lattice(schemes, SimConfig(), tr, nets, w.comp_ratio,
+                     policies=list(reversed(pols)))
+    assert lattice_cache_size() - before == 1
+
+
+# ------------------------------------------------- desim tier invariants
+def _desim_tier_checks(fin, wire_b):
+    res = fin.res
+    c, s, wways = res.page.shape
+    pages = np.asarray(res.page)
+    dirty = np.asarray(res.dirty)
+    # occupancy never exceeds capacity (structural per set, checked flat)
+    assert int((pages >= 0).sum()) <= c * s * wways
+    for cu in range(c):
+        for si in range(s):
+            live = pages[cu, si][pages[cu, si] >= 0]
+            # no duplicate resident page ids within a set
+            assert len(live) == len(set(live.tolist())), (cu, si)
+            # every resident page maps to its own set
+            assert all(p % s == si for p in live.tolist()), (cu, si)
+    # dirty bits only on resident slots
+    assert not bool((dirty & (pages < 0)).any())
+    # every dirty eviction reached the writeback ledger, exactly
+    wb_ledger = float(jnp.sum(fin.net.wb_bytes))
+    np.testing.assert_allclose(wb_ledger, float(fin.stats["wb_bytes"]),
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(fin.stats["wb_bytes"]),
+                               float(fin.stats["dirty_evicts"]) * wire_b,
+                               rtol=1e-5)
+
+
+@settings(max_examples=4, deadline=None)
+@given(hyp_st.integers(0, 2**31 - 1),
+       hyp_st.sampled_from(POLICY_NAMES))
+def test_desim_tier_invariants(seed, policy):
+    w = WORKLOADS["pr"]
+    tr = generate_trace(w, 400, seed=seed % 1000)
+    fin = run_trace(SCHEMES["pq"], SimConfig(local_frac=0.1), tr,
+                    make_net(NetworkParams()), w.comp_ratio,
+                    policy=POLICIES[policy])
+    # pq moves uncompressed pages: wire bytes == page bytes
+    _desim_tier_checks(fin, float(SimConfig().daemon.page_bytes))
+
+
+# ------------------------------------------------- store tier invariants
+def _store_cfg(policy, n=4, modules=2):
+    return KVStoreConfig(num_local_pages=n, page_tokens=8, kv_heads=2,
+                         head_dim=16, page_budget_per_step=4,
+                         policy=policy,
+                         fabric=FabricConfig(num_modules=modules))
+
+
+@settings(max_examples=4, deadline=None)
+@given(hyp_st.integers(0, 2**31 - 1),
+       hyp_st.sampled_from(POLICY_NAMES))
+def test_store_tier_invariants(seed, policy):
+    cfg = _store_cfg(policy)
+    state = init_kv_store(cfg)
+    remote = jnp.zeros((24, 8, 2, 16), jnp.float32)
+    rng = np.random.default_rng(seed)
+    fetch = jax.jit(lambda s, need, wr: step_fetch(s, cfg, remote, remote,
+                                                   need, None, wr))
+    for _ in range(15):
+        need = jnp.asarray(rng.integers(0, 24, size=(3,)), jnp.int32)
+        wr = jnp.asarray(rng.random((3,)) < 0.5)
+        state, *_ = fetch(state, need, wr)
+    pages = np.asarray(state.seq.slot_page)
+    dirty = np.asarray(state.seq.slot_dirty)
+    live = pages[pages >= 0]
+    assert len(live) <= cfg.num_local_pages          # occupancy bound
+    assert len(live) == len(set(live.tolist()))      # no duplicates
+    assert not bool((dirty & (pages < 0)).any())     # dirty => resident
+    # every dirty eviction reached the writeback ledger, exactly
+    led = ledger(state)
+    page_wire = _wire_bytes(cfg, cfg.page_tokens, cfg.compress_pages)
+    np.testing.assert_allclose(float(state.fab.wb_bytes.sum()),
+                               led["writeback_bytes"], rtol=1e-5)
+    np.testing.assert_allclose(led["writeback_bytes"],
+                               led["dirty_evicts"] * page_wire, rtol=1e-5)
+    # and total conservation (fabric == stats) still holds
+    np.testing.assert_allclose(float(fabric.total_bytes(state.fab)),
+                               led["wire_bytes"], rtol=1e-5)
+
+
+def test_store_policy_config_validated():
+    with pytest.raises(ValueError):
+        _store_cfg("nope")
+    w = WORKLOADS["bc"]
+    tr = generate_trace(w, 200, seed=5)
+    with pytest.raises(ValueError):
+        simulate_lattice([SCHEMES["remote"]], SimConfig(), tr,
+                         [make_net(NetworkParams())], w.comp_ratio,
+                         policies=[])
+
+
+def test_store_policy_override_is_data_not_code():
+    """The steppers' traced `policy=` override: sweeping all four
+    policies over ONE static config adds exactly one jit trace, and the
+    override actually steers eviction (fifo != lru tier ages)."""
+    cfg = _store_cfg("lru")
+    remote = jnp.zeros((24, 8, 2, 16), jnp.float32)
+    fetch = jax.jit(lambda s, need, pol: step_fetch(
+        s, cfg, remote, remote, need, None, None, pol))
+    # a 6-page hot set over a 4-slot pool: plenty of hits (LRU refreshes
+    # diverge from FIFO insert order) AND steady eviction churn
+    needs = np.random.default_rng(3).integers(0, 6, size=(12, 3))
+    finals = {}
+    for pname in POLICY_NAMES:
+        state = init_kv_store(cfg)
+        pol = residency.as_policy(pname)
+        for t in range(12):
+            state, *_ = fetch(state, jnp.asarray(needs[t], jnp.int32),
+                              pol)
+        finals[pname] = state
+    assert fetch._cache_size() == 1      # flags are data, not code
+    assert not np.array_equal(np.asarray(finals["lru"].seq.slot_age),
+                              np.asarray(finals["fifo"].seq.slot_age))
+
+
+# ------------------------------------------------- store B=1 batched pin
+def test_store_single_is_batch1_after_rewrite():
+    """The residency rewrite keeps step_fetch == step_fetch_batch(B=1):
+    channel clocks, tier tables, and every stat bit-for-bit."""
+    cfg = _store_cfg("lru", n=4, modules=2)
+    remote = jnp.zeros((16, 8, 2, 16), jnp.float32)
+    rng = np.random.default_rng(7)
+    st_s = init_kv_store(cfg)
+    st_b = init_kv_store_batch(cfg, 1)
+    for _ in range(12):
+        need = jnp.asarray(rng.integers(0, 16, size=(3,)), jnp.int32)
+        offs = jnp.asarray(rng.integers(0, 64, size=(3,)), jnp.int32)
+        wr = jnp.asarray(rng.random((3,)) < 0.5)
+        st_s, _, _, hit_s = step_fetch(st_s, cfg, remote, remote, need,
+                                       offs, wr)
+        st_b, _, _, hit_b = step_fetch_batch(st_b, cfg, remote, remote,
+                                             need[None], offs[None],
+                                             wr[None])
+        np.testing.assert_array_equal(np.asarray(hit_s),
+                                      np.asarray(hit_b[0]))
+    np.testing.assert_array_equal(np.asarray(st_s.seq.slot_page),
+                                  np.asarray(st_b.seqs.slot_page[0]))
+    np.testing.assert_array_equal(np.asarray(st_s.seq.slot_age),
+                                  np.asarray(st_b.seqs.slot_age[0]))
+    np.testing.assert_array_equal(np.asarray(st_s.fab.page_busy),
+                                  np.asarray(st_b.fab.page_busy))
+    np.testing.assert_array_equal(np.asarray(st_s.fab.line_busy),
+                                  np.asarray(st_b.fab.line_busy))
+    for k, v in ledger(st_b).items():
+        if k != "module_bytes":
+            assert ledger(st_s)[k] == v, k
+
+
+def test_store_dirty_averse_spares_written_pages():
+    """Under a write-heavy churn stream the dirty-averse policy pays no
+    more writeback bytes than LRU (it victimizes clean slots first)."""
+    def run(policy):
+        cfg = _store_cfg(policy, n=4, modules=1)
+        state = init_kv_store(cfg)
+        remote = jnp.zeros((32, 8, 2, 16), jnp.float32)
+        fetch = jax.jit(lambda s, need, wr: step_fetch(
+            s, cfg, remote, remote, need, None, wr))
+        for t in range(72):
+            # advancing page pairs: the even page of each pair is written
+            # (dirtied on hit), then the window moves past both — LRU
+            # evicts in age order (dirty and clean alike), dirty-averse
+            # victimizes the clean halves first
+            q = ((t // 6) * 2) % 24
+            state, *_ = fetch(state, jnp.asarray([q, q + 1], jnp.int32),
+                              jnp.asarray([True, False]))
+        return ledger(state)
+
+    lru, averse = run("lru"), run("dirty-averse")
+    assert lru["writeback_bytes"] > 0.0
+    assert averse["writeback_bytes"] < lru["writeback_bytes"]
+    assert averse["evictions"] == lru["evictions"]   # same churn, cheaper
