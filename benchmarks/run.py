@@ -25,7 +25,7 @@ import numpy as np
 from benchmarks import (capacity, figures, robustness, roofline, scaling,
                         serving)
 from benchmarks.common import ORDER
-from benchmarks.validate import check
+from benchmarks.validate import assert_bench_schema, check
 
 BENCH_SERVE_JSON = Path("BENCH_serve.json")
 BENCH_ROBUST_JSON = Path("BENCH_robust.json")
@@ -39,6 +39,10 @@ def main() -> None:
                     help="short traces (20k) for CI")
     ap.add_argument("--only", default="",
                     help="comma list: fig3,fig8,fig9,... roofline")
+    ap.add_argument("--impl", default="auto",
+                    choices=("auto", "pallas", "ref", "chain"),
+                    help="store hot-path impl for the serve sweep "
+                         "(KVStoreConfig.kernel_impl)")
     args = ap.parse_args()
     r = 20000 if args.quick else None
     only = set(filter(None, args.only.split(",")))
@@ -97,14 +101,18 @@ def main() -> None:
     if want("fig21"):
         figures.fig21_bw_factor(r)
     if want("serve"):
-        sv = serving.serve_sweep(quick=args.quick)
+        sv = serving.serve_sweep(quick=args.quick, impl=args.impl)
+        assert_bench_schema(BENCH_SERVE_JSON.name, sv)
         BENCH_SERVE_JSON.write_text(json.dumps(sv, indent=2) + "\n")
         print(f"# BENCH_serve.json written: "
               f"{sv['tokens_per_s']:.0f} tok/s, "
               f"{sv['wire_bytes']/1e6:.2f}MB wire, "
-              f"hit {sv['hit_ratio']:.3f}")
+              f"hit {sv['hit_ratio']:.3f}, "
+              f"fused_vs_ref_tokens_ratio "
+              f"{sv['fused_vs_ref_tokens_ratio']:.3f}")
     if want("robust"):
         rb = robustness.robust_sweep(quick=args.quick)
+        assert_bench_schema(BENCH_ROBUST_JSON.name, rb)
         BENCH_ROBUST_JSON.write_text(json.dumps(rb, indent=2) + "\n")
         hl = rb["headline"]
         print(f"# BENCH_robust.json written: adaptive-vs-best-static "
@@ -113,6 +121,7 @@ def main() -> None:
     if want("scale"):
         sc = scaling.scale_sweep(quick=args.quick,
                                  desim=f22["desim"] if f22 else None)
+        assert_bench_schema(BENCH_SCALE_JSON.name, sc)
         BENCH_SCALE_JSON.write_text(json.dumps(sc, indent=2) + "\n")
         hl = sc["headline"]
         print(f"# BENCH_scale.json written: store tokens/s C8-vs-C1 "
@@ -121,6 +130,7 @@ def main() -> None:
               f"(gap {hl['scaling_gap']:.2f}x)")
     if want("capacity"):
         cp = capacity.capacity_sweep(quick=args.quick)
+        assert_bench_schema(BENCH_CAPACITY_JSON.name, cp)
         BENCH_CAPACITY_JSON.write_text(json.dumps(cp, indent=2) + "\n")
         hl = cp["headline"]
         values["daemon_capacity_slope"] = hl["capacity_gap"]

@@ -9,6 +9,15 @@ per (movement style, M, placement) — DaeMon movement (compressed page
 plane + critical sub-blocks + fabric-pressure-aware selection) vs
 Remote-style (uncompressed) — and emits the machine-readable
 `BENCH_serve.json` the CI smoke job records.
+
+The sweep also times the store hot path itself (`kernel_sweep`): the
+fused residency transaction (`kernel_impl="auto"` — the Pallas kernel's
+jnp oracle on CPU, the kernel on TPU) against the legacy per-primitive
+`_land`/`_lookup` chain (`kernel_impl="chain"`), at production shapes —
+B=64 tenants, a 4096-page set-associative pool (256 sets x 16 ways) per
+tenant — emitting a `kernel_impl` column per row and the
+`fused_vs_ref_tokens_ratio` wall-time headline (fused / chain tokens
+per second; methodology in EXPERIMENTS.md "Kernel plane").
 """
 from __future__ import annotations
 
@@ -19,6 +28,7 @@ from benchmarks.common import (SERVE_BATCH as BATCH,
                                csv_print, run_store_warmed)
 from repro.core.daemon_store import KVStoreConfig
 from repro.core.fabric import FabricConfig
+from repro.core.params import DaemonParams
 
 WIDTH = 4                 # page requests per tenant per decode step
 
@@ -32,14 +42,35 @@ SWEEP = (
     ("remote-style", False, 4, "interleave"),
 )
 
+# production-shape hot-path sweep: B tenants x (sets x ways) pool slots
+# against an oversubscribed remote region (2x the pool, so landings and
+# evictions keep flowing at steady state). Payload dims are small on
+# purpose: the sweep times the residency TRANSACTION (the part the fused
+# kernel replaces), not the payload copy bandwidth.
+KERNEL_BATCH = 64
+KERNEL_POOL_PAGES = 4096
+KERNEL_WAYS = 16                      # 256 sets x 16 ways
+KERNEL_PAGES_PER_TENANT = 8192
 
-def _store_cfg(compress: bool, modules: int, placement: str
-               ) -> KVStoreConfig:
+
+def _store_cfg(compress: bool, modules: int, placement: str,
+               impl: str = "auto") -> KVStoreConfig:
     return KVStoreConfig(
         num_local_pages=16, page_tokens=16, kv_heads=4, head_dim=64,
         compress_pages=compress, page_budget_per_step=8,
+        kernel_impl=impl,
         fabric=FabricConfig(num_modules=modules, placement=placement,
                             affinity_block=PAGES_PER_TENANT))
+
+
+def _kernel_cfg(impl: str) -> KVStoreConfig:
+    return KVStoreConfig(
+        num_local_pages=KERNEL_POOL_PAGES, page_tokens=4, kv_heads=1,
+        head_dim=8, page_budget_per_step=8, pool_ways=KERNEL_WAYS,
+        kernel_impl=impl,
+        daemon=DaemonParams(inflight_page_buf=16, inflight_sb_buf=32),
+        fabric=FabricConfig(num_modules=4, placement="interleave",
+                            affinity_block=KERNEL_PAGES_PER_TENANT))
 
 
 def _tenant_streams(steps: int, seed: int = 0):
@@ -52,7 +83,8 @@ def _tenant_streams(steps: int, seed: int = 0):
     return zipf + base, offs
 
 
-def _run_one(cfg: KVStoreConfig, pages, offs) -> dict:
+def _run_one(cfg: KVStoreConfig, pages, offs, batch: int = BATCH,
+             n_remote: int = None) -> dict:
     """One sweep point. Throughput and hit ratio are *warmup-gated*: the
     first WARM_FRAC of the steps (cold pools, compile) are excluded from
     tokens_per_s and hit_ratio — the same gating desim applies to its
@@ -60,9 +92,10 @@ def _run_one(cfg: KVStoreConfig, pages, offs) -> dict:
     robustness sweep), so BENCH_serve.json is comparable across runs and
     trace lengths. Byte/move totals still cover the whole run (they feed
     the conservation checks)."""
-    run = run_store_warmed(cfg, pages, offs, BATCH * PAGES_PER_TENANT)
+    n_remote = n_remote or BATCH * PAGES_PER_TENANT
+    run = run_store_warmed(cfg, pages, offs, n_remote)
     led, led_warm, warm = run["led"], run["led_warm"], run["warm"]
-    decoded = BATCH * (run["steps"] - warm)
+    decoded = batch * (run["steps"] - warm)
     hits = led["local_hits"] - led_warm["local_hits"]
     reqs = led["requests"] - led_warm["requests"]
     return {
@@ -77,15 +110,53 @@ def _run_one(cfg: KVStoreConfig, pages, offs) -> dict:
     }
 
 
-def serve_sweep(quick: bool = False, steps: int = None) -> dict:
+def _kernel_streams(steps: int, seed: int = 7):
+    rng = np.random.default_rng(seed)
+    zipf = (rng.zipf(1.3, size=(steps, KERNEL_BATCH, WIDTH))
+            .clip(1, KERNEL_PAGES_PER_TENANT) - 1).astype(np.int32)
+    base = (np.arange(KERNEL_BATCH, dtype=np.int32)
+            * KERNEL_PAGES_PER_TENANT)[None, :, None]
+    offs = rng.integers(0, 4, size=(steps, KERNEL_BATCH, WIDTH)
+                        ).astype(np.int32)
+    return zipf + base, offs
+
+
+def kernel_sweep(quick: bool = False, steps: int = None) -> list:
+    """Time the hot path at production shapes, fused vs legacy chain.
+
+    Returns one row per `kernel_impl` in ("auto", "chain") with the
+    warm-gated tokens/s at B=64 tenants x 4096-page (256x16) pools.
+    Wire/hit metrics must agree between the impls (bit-identity); the
+    wall time is the point."""
+    steps = steps or (16 if quick else 48)
+    pages, offs = _kernel_streams(steps)
+    out = []
+    for impl in ("auto", "chain"):
+        res = _run_one(_kernel_cfg(impl), pages, offs,
+                       batch=KERNEL_BATCH,
+                       n_remote=KERNEL_BATCH * KERNEL_PAGES_PER_TENANT)
+        res.update(label="hotpath", kernel_impl=impl,
+                   batch=KERNEL_BATCH, pool_pages=KERNEL_POOL_PAGES,
+                   pool_geometry=(f"{KERNEL_POOL_PAGES // KERNEL_WAYS}"
+                                  f"x{KERNEL_WAYS}"))
+        out.append(res)
+    return out
+
+
+def serve_sweep(quick: bool = False, steps: int = None,
+                impl: str = "auto") -> dict:
+    """`impl` sets the hot-path implementation of the MAIN tenant sweep
+    (`KVStoreConfig.kernel_impl` — the CI smoke pins "ref"); the
+    production-shape `kernel_sweep` always times auto-vs-chain."""
     steps = steps or (150 if quick else 400)
     pages, offs = _tenant_streams(steps)
     rows = []
     results = []
     for label, compress, modules, placement in SWEEP:
-        res = _run_one(_store_cfg(compress, modules, placement), pages,
-                       offs)
-        res.update(label=label, modules=modules, placement=placement)
+        res = _run_one(_store_cfg(compress, modules, placement, impl),
+                       pages, offs)
+        res.update(label=label, modules=modules, placement=placement,
+                   kernel_impl=impl)
         results.append(res)
         rows.append([label, modules, placement,
                      round(res["tokens_per_s"], 1),
@@ -97,17 +168,29 @@ def serve_sweep(quick: bool = False, steps: int = None) -> dict:
               "(daemon vs remote-style wire bytes at equal service)",
               ["scheme", "modules", "placement", "tokens_per_s",
                "wire_MB", "hit_ratio", "per_module_MB"], rows)
+    kernel_rows = kernel_sweep(quick=quick)
+    csv_print(f"serve-kernel: hot-path impl, B={KERNEL_BATCH} tenants x "
+              f"{KERNEL_POOL_PAGES}-page pools "
+              f"({KERNEL_POOL_PAGES // KERNEL_WAYS}x{KERNEL_WAYS})",
+              ["kernel_impl", "tokens_per_s", "hit_ratio"],
+              [[r["kernel_impl"], round(r["tokens_per_s"], 1),
+                round(r["hit_ratio"], 4)] for r in kernel_rows])
     daemon4 = next(r for r in results
                    if r["label"] == "daemon" and r["modules"] == 4
                    and r["placement"] == "interleave")
     remote4 = next(r for r in results if r["label"] == "remote-style")
+    fused = next(r for r in kernel_rows if r["kernel_impl"] == "auto")
+    chain = next(r for r in kernel_rows if r["kernel_impl"] == "chain")
     return {
-        "batch": BATCH, "steps": steps, "quick": quick,
+        "batch": BATCH, "steps": steps, "quick": quick, "impl": impl,
         "warm_steps": daemon4["warm_steps"],
         "tokens_per_s": daemon4["tokens_per_s"],
         "wire_bytes": daemon4["wire_bytes"],
         "hit_ratio": daemon4["hit_ratio"],
         "daemon_vs_remote_wire_ratio":
             daemon4["wire_bytes"] / max(remote4["wire_bytes"], 1e-9),
+        "fused_vs_ref_tokens_ratio":
+            fused["tokens_per_s"] / max(chain["tokens_per_s"], 1e-9),
         "rows": results,
+        "kernel_rows": kernel_rows,
     }

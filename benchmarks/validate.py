@@ -33,6 +33,70 @@ CLAIMS = [
 ]
 
 
+# ---------------------------------------------------------------------------
+# BENCH_*.json schema: the exact key sets each producer writes today.
+# A checked-in BENCH json carrying keys its producer no longer emits is
+# STALE (regenerated code, old artifact) — assert_bench_schema fails on it
+# so CI catches the drift instead of a reader trusting a dead column.
+# Keep these in lockstep with the producers' return dicts
+# (serving.serve_sweep / robustness.robust_sweep / scaling.scale_sweep /
+# capacity.capacity_sweep); nested data-keyed dicts (per-profile, per-C)
+# are not enumerated — only declared levels are checked.
+
+_SERVE_ROW = {
+    "tokens_per_s", "wire_bytes", "uncompressed_bytes", "hit_ratio",
+    "page_moves", "sub_block_fetches", "module_bytes", "warm_steps",
+    "label", "kernel_impl",
+}
+
+BENCH_SCHEMAS = {
+    "BENCH_serve.json": {
+        "top": {"batch", "steps", "quick", "impl", "warm_steps",
+                "tokens_per_s", "wire_bytes", "hit_ratio",
+                "daemon_vs_remote_wire_ratio",
+                "fused_vs_ref_tokens_ratio", "rows", "kernel_rows"},
+        "row_lists": {
+            "rows": _SERVE_ROW | {"modules", "placement"},
+            "kernel_rows": _SERVE_ROW | {"batch", "pool_pages",
+                                         "pool_geometry"},
+        },
+    },
+    "BENCH_robust.json": {
+        "top": {"quick", "profiles", "static_ratios", "desim", "store",
+                "desim_adaptive_win_by_profile",
+                "store_adaptive_win_by_profile", "headline"},
+    },
+    "BENCH_scale.json": {
+        "top": {"quick", "c_sweep", "module_sweep", "batch_per_replica",
+                "desim", "store", "headline"},
+    },
+    "BENCH_capacity.json": {
+        "top": {"quick", "fracs", "policies", "workload", "desim",
+                "store", "headline"},
+    },
+}
+
+
+def assert_bench_schema(name: str, doc: dict) -> None:
+    """Raise ValueError if `doc` (a parsed BENCH_*.json) carries keys its
+    producer no longer writes. Missing keys are fine (quick runs may omit
+    sections); EXTRA keys mean the artifact predates the current code."""
+    schema = BENCH_SCHEMAS.get(name)
+    if schema is None:
+        return
+    stale = sorted(set(doc) - schema["top"])
+    for list_key, allowed in schema.get("row_lists", {}).items():
+        for row in doc.get(list_key) or []:
+            stale += sorted(f"{list_key}[].{k}"
+                            for k in set(row) - allowed)
+    if stale:
+        raise ValueError(
+            f"{name} is stale: keys no longer written by its producer: "
+            f"{sorted(set(stale))} — regenerate with "
+            f"`python -m benchmarks.run --only "
+            f"{name.split('_')[1].split('.')[0]}`")
+
+
 def check(values: dict):
     rows = []
     ok_all = True

@@ -73,6 +73,17 @@ page fetched later is a clean remote copy (desim instead inserts its
 table entry at miss time and carries the triggering request's write
 flag into it). Only write HITS dirty the resident copy.
 
+Hot-path implementation (the kernel plane, DESIGN.md §9): steps 1 + 3's
+per-sequence residency transaction — landing compaction, victim
+selection, dirty-eviction enqueue, pool scatter, CAM probe, hit gather,
+policy touch — is served by ONE fused op (``ops.residency_fused`` via
+``_transact``), selected by the STATIC ``KVStoreConfig.kernel_impl``
+lattice: ``"auto"`` (Pallas kernel on TPU, its jnp oracle elsewhere),
+``"pallas"``, ``"ref"`` (the oracle, ``kernels.ref``), or ``"chain"``
+(the legacy per-primitive ``_land``/``_lookup`` path, kept as the
+bit-identical benchmark comparator). ``pool_ways`` generalizes the pool
+to a sets x ways geometry (0 = fully-associative, the default).
+
 All state is a pytree; both steppers are jit/scan-friendly. The byte
 ledger (`stats` + the fabric's per-module byte counters) is what
 examples/serve_paged.py reports against the Remote (page-only) baseline.
@@ -112,15 +123,33 @@ class KVStoreConfig:
     adaptive_ratio: bool = False  # §4.1 ratio as adapted fabric state
     fabric: FabricConfig = FabricConfig()  # modules + placement
     policy: str = "lru"           # pool replacement (residency.POLICIES)
+    pool_ways: int = 0            # set-assoc pool geometry; 0 = fully assoc
+    kernel_impl: str = "auto"     # hot-path impl: auto|pallas|ref|chain
 
     def __post_init__(self):
         if self.policy not in residency.POLICIES:
             raise ValueError(f"policy must be one of "
                              f"{tuple(residency.POLICIES)}, "
                              f"got {self.policy!r}")
+        if self.kernel_impl not in KERNEL_IMPLS:
+            raise ValueError(f"kernel_impl must be one of {KERNEL_IMPLS},"
+                             f" got {self.kernel_impl!r}")
+        if self.pool_ways > 0 and self.num_local_pages % self.pool_ways:
+            raise ValueError(f"pool_ways={self.pool_ways} must divide "
+                             f"num_local_pages={self.num_local_pages}")
 
     def policy_flags(self) -> residency.PolicyFlags:
         return residency.as_policy(self.policy)
+
+    def pool_geometry(self) -> Tuple[int, int]:
+        """(sets, ways) of the local page table. The default (pool_ways
+        = 0) is the store's historical ONE fully-associative set; a
+        positive `pool_ways` splits the same N slots into N/ways sets —
+        the geometry the fused kernel's O(W^2) in-kernel victim ranking
+        is sized for (production shapes run e.g. 256x16)."""
+        if self.pool_ways <= 0:
+            return 1, self.num_local_pages
+        return self.num_local_pages // self.pool_ways, self.pool_ways
 
 
 def _flat(tbl: jnp.ndarray) -> jnp.ndarray:
@@ -136,8 +165,9 @@ class SeqState(NamedTuple):
     # local pool: (N, page, KV, D) x2 (k, v)
     kpool: jnp.ndarray
     vpool: jnp.ndarray
-    # local page table: the shared residency tier (repro.core.residency)
-    # as ONE fully-associative set — leaves (1, N); slot j == way j
+    # local page table: the shared residency tier (repro.core.residency),
+    # (S, W) per cfg.pool_geometry() (default ONE fully-associative set,
+    # leaves (1, N)); flat pool slot = set * W + way
     res: residency.ResidencyState
     # DaeMon movement plane (inflight page + sub-block CAMs, §4.2)
     eng: EngineState
@@ -226,6 +256,12 @@ STAT_KEYS = ("sub_block_fetches", "page_moves", "wire_bytes",
              "uncompressed_bytes", "local_hits", "requests", "stall_steps",
              "writeback_bytes", "dirty_evicts", "evictions")
 
+# hot-path implementations: "auto" = fused Pallas kernel on TPU, fused
+# jnp oracle elsewhere; "pallas"/"ref" force one fused side; "chain" =
+# the legacy per-primitive _land/_lookup op chain (kept as the
+# benchmark comparator and the seed-pinned reference)
+KERNEL_IMPLS = ("auto", "pallas", "ref", "chain")
+
 
 def _init_seq(cfg: KVStoreConfig) -> SeqState:
     n = cfg.num_local_pages
@@ -233,7 +269,7 @@ def _init_seq(cfg: KVStoreConfig) -> SeqState:
     return SeqState(
         kpool=jnp.zeros(shape, jnp.bfloat16),
         vpool=jnp.zeros(shape, jnp.bfloat16),
-        res=residency.init_residency(1, n),
+        res=residency.init_residency(*cfg.pool_geometry()),
         eng=init_engine_state(cfg.daemon),
         stats={k: jnp.zeros((), F32) for k in STAT_KEYS},
     )
@@ -340,18 +376,27 @@ def _land(seq: SeqState, cfg: KVStoreConfig, remote_k, remote_v, clock,
     skipped (`lax.cond`) on the common steady-state steps where nothing
     arrives (under the batched path's `vmap` the cond lowers to a select,
     so there it costs one bounded gather per step). The j-th landed entry
-    (slot order) takes the j-th slot of the policy's eviction order
-    (`residency.evict_order` — under LRU the lowest-age victims, the
-    sequential argmin-with-updates order of a per-slot scan).
+    (slot order) takes the rank-j victim of its own set
+    (`residency.landing_victims` — with the default fully-associative
+    geometry exactly the first k of `evict_order`, under LRU the
+    lowest-age victims).
 
     More than N pages landing on one step (possible with a wide fabric
     and budgets >= page_tokens) lands the first N in slot order; the
     excess entries are retired un-landed — a dropped migration, like the
-    simulator's `page_drops`. The pool is a cache, so a later touch just
-    re-requests them; their wire bytes were genuinely spent.
+    simulator's `page_drops` (as are same-set overflow landings under a
+    set-associative `pool_ways` geometry). The pool is a cache, so a
+    later touch just re-requests them; their wire bytes were genuinely
+    spent.
+
+    This is the LEGACY per-primitive chain (`kernel_impl="chain"`); the
+    default store serves the same transaction through the fused kernel
+    path (`_transact` -> `ops.residency_fused`), bit-identical by
+    construction and pinned by tests/test_residency_fused.py.
     """
     landed, landed_pages = poll_arrivals(seq.eng, clock)
     p = int(landed.shape[0])
+    w_ways = seq.res.page.shape[-1]
     k_land = min(p, cfg.num_local_pages)
     no_evict = jnp.full((k_land,), -1, jnp.int32)
 
@@ -365,17 +410,21 @@ def _land(seq: SeqState, cfg: KVStoreConfig, remote_k, remote_v, clock,
             seq.kpool.dtype)
         page_v = ops.paged_gather(remote_v, jnp.maximum(pids, 0)).astype(
             seq.vpool.dtype)
-        victims = residency.evict_order(seq.res, pol)[:k_land]
+        sets, vways, ok = residency.landing_victims(seq.res, pids, pol)
+        do = do & ok
+        victims = sets * w_ways + vways              # flat pool slots
         resident = seq.slot_page[victims] >= 0
         evicted = jnp.where(do & seq.slot_dirty[victims] & resident,
                             seq.slot_page[victims], no_evict)
 
         def put(tbl, val):
-            gate = do.reshape((-1,) + (1,) * (tbl.ndim - 1))
-            return tbl.at[victims].set(jnp.where(gate, val, tbl[victims]))
+            # masked lanes scatter out of bounds and drop — a clamped
+            # duplicate target must never clobber a live landing
+            return tbl.at[jnp.where(do, victims, tbl.shape[0])].set(
+                val, mode="drop")
 
         # a freshly landed page is a clean remote copy (dirty=False)
-        res = residency.insert(seq.res, jnp.zeros_like(victims), victims,
+        res = residency.insert(seq.res, sets, vways,
                                pids, now=clock, ready=clock, dirty=False,
                                gate=do)
         stats = {**seq.stats,
@@ -407,17 +456,49 @@ def _lookup(seq: SeqState, clock, needed_pages, needed_writes,
     policy-gated (`residency.touch`): LRU refreshes, FIFO keeps insert
     order.
     """
-    present, set_idx, slot, ready_ok = residency.lookup(seq.res,
-                                                        needed_pages,
-                                                        clock)
+    present, set_idx, way, ready_ok = residency.lookup(seq.res,
+                                                       needed_pages,
+                                                       clock)
     local_hit = present & ready_ok
+    slot = set_idx * seq.res.page.shape[-1] + way    # flat pool slot
     k_local = ops.paged_gather(seq.kpool, jnp.maximum(slot, 0))
     v_local = ops.paged_gather(seq.vpool, jnp.maximum(slot, 0))
-    res = residency.touch(seq.res, set_idx, slot, clock, pol,
+    res = residency.touch(seq.res, set_idx, way, clock, pol,
                           gate=local_hit)
-    res = residency.mark_dirty(res, set_idx, slot, needed_writes,
+    res = residency.mark_dirty(res, set_idx, way, needed_writes,
                                gate=local_hit)
     return seq._replace(res=res), k_local, v_local, local_hit
+
+
+def _transact(seqs: SeqState, cfg: KVStoreConfig, remote_k, remote_v,
+              clock, pol: residency.PolicyFlags, needed_pages,
+              needed_writes):
+    """The fused residency transaction for B stacked sequences (leading
+    batch axis on every SeqState leaf): one `ops.residency_fused` call
+    executes landing + victim selection + dirty-eviction enqueue + pool
+    scatter + CAM probe + hit gather + policy touch for the whole batch
+    — `_land` + `_lookup` as ONE op (a single Pallas kernel on TPU,
+    grid = batch; the fused jnp oracle elsewhere; `cfg.kernel_impl`
+    picks). Only the engine CAM poll/retire and the stats fold stay
+    outside: they are movement-plane state, not tier state.
+
+    Returns (seqs', evicted (B, k), k_local, v_local, local_hit) with
+    the same shapes/values as the vmapped legacy chain."""
+    landed, landed_pages = jax.vmap(
+        lambda e: poll_arrivals(e, clock))(seqs.eng)
+    res, kpool, vpool, evicted, n_ev, k_local, v_local, local_hit = \
+        ops.residency_fused(seqs.res, seqs.kpool, seqs.vpool, remote_k,
+                            remote_v, landed, landed_pages, needed_pages,
+                            needed_writes, clock, pol,
+                            impl=cfg.kernel_impl)
+    stats = {**seqs.stats,
+             "evictions": seqs.stats["evictions"] + n_ev}
+    eng = jax.vmap(
+        lambda e: retire_arrivals(e, clock, cfg.daemon.lines_per_page))(
+            seqs.eng)
+    seqs = seqs._replace(res=res, kpool=kpool, vpool=vpool, eng=eng,
+                         stats=stats)
+    return seqs, evicted, k_local, v_local, local_hit
 
 
 def _remote_fetch(remote_k, remote_v, pages_flat, any_miss):
@@ -646,13 +727,23 @@ def step_fetch(state: KVStoreState, cfg: KVStoreConfig,
     bytes — the request rides the page already in flight (exactly the
     simulator's race rule).
     """
+    needed_pages = jnp.asarray(needed_pages, jnp.int32)
     offs = _offsets_or_zero(needed_pages, needed_offsets)
     writes = _writes_or_zero(needed_pages, needed_writes)
     pol = _policy_or_cfg(cfg, policy)
     clock = state.clock + 1.0
-    seq, evicted = _land(state.seq, cfg, remote_k, remote_v, clock, pol)
-    seq, k_local, v_local, local_hit = _lookup(seq, clock, needed_pages,
-                                               writes, pol)
+    if cfg.kernel_impl == "chain":
+        seq, evicted = _land(state.seq, cfg, remote_k, remote_v, clock,
+                             pol)
+        seq, k_local, v_local, local_hit = _lookup(seq, clock,
+                                                   needed_pages, writes,
+                                                   pol)
+    else:
+        seqs = jax.tree.map(lambda x: x[None], state.seq)
+        out = _transact(seqs, cfg, remote_k, remote_v, clock, pol,
+                        needed_pages[None], writes[None])
+        seq, evicted, k_local, v_local, local_hit = jax.tree.map(
+            lambda x: x[0], out)
     k_remote, v_remote = _remote_fetch(remote_k, remote_v, needed_pages,
                                        jnp.any(~local_hit))
     sel = local_hit[:, None, None, None]
@@ -677,17 +768,23 @@ def step_fetch_batch(state: BatchedKVStoreState, cfg: KVStoreConfig,
 
     Returns (state, k (B,R,page,KV,D), v, served_local (B,R) bool).
     """
+    needed_pages = jnp.asarray(needed_pages, jnp.int32)
     b, r = needed_pages.shape
     offs = _offsets_or_zero(needed_pages, needed_offsets)
     writes = _writes_or_zero(needed_pages, needed_writes)
     pol = _policy_or_cfg(cfg, policy)
     clock = state.clock + 1.0
-    seqs, evicted = jax.vmap(
-        lambda s: _land(s, cfg, remote_k, remote_v, clock, pol))(
-            state.seqs)
-    seqs, k_local, v_local, local_hit = jax.vmap(
-        lambda s, need, wr: _lookup(s, clock, need, wr, pol))(
-            seqs, needed_pages, writes)
+    if cfg.kernel_impl == "chain":
+        seqs, evicted = jax.vmap(
+            lambda s: _land(s, cfg, remote_k, remote_v, clock, pol))(
+                state.seqs)
+        seqs, k_local, v_local, local_hit = jax.vmap(
+            lambda s, need, wr: _lookup(s, clock, need, wr, pol))(
+                seqs, needed_pages, writes)
+    else:
+        seqs, evicted, k_local, v_local, local_hit = _transact(
+            state.seqs, cfg, remote_k, remote_v, clock, pol,
+            needed_pages, writes)
     k_remote, v_remote = _remote_fetch(remote_k, remote_v,
                                        needed_pages.reshape(-1),
                                        jnp.any(~local_hit))
@@ -739,12 +836,17 @@ def step_fetch_replicated(state: ReplicatedKVStoreState,
     active = c > 1
     pol = _policy_or_cfg(cfg, policy)
     clock = state.clock + 1.0
-    seqs, evicted = jax.vmap(
-        lambda s: _land(s, cfg, remote_k, remote_v, clock, pol))(
-            state.seqs)
-    seqs, k_local, v_local, local_hit = jax.vmap(
-        lambda s, need, wr: _lookup(s, clock, need, wr, pol))(seqs, flat,
-                                                              writes)
+    if cfg.kernel_impl == "chain":
+        seqs, evicted = jax.vmap(
+            lambda s: _land(s, cfg, remote_k, remote_v, clock, pol))(
+                state.seqs)
+        seqs, k_local, v_local, local_hit = jax.vmap(
+            lambda s, need, wr: _lookup(s, clock, need, wr, pol))(
+                seqs, flat, writes)
+    else:
+        seqs, evicted, k_local, v_local, local_hit = _transact(
+            state.seqs, cfg, remote_k, remote_v, clock, pol, flat,
+            writes)
     k_remote, v_remote = _remote_fetch(remote_k, remote_v,
                                        flat.reshape(-1),
                                        jnp.any(~local_hit))

@@ -223,17 +223,21 @@ def mark_dirty(res: ResidencyState, set_idx, way, write, *,
 
 def insert(res: ResidencyState, set_idx, way, page, *, now, ready, dirty,
            gate) -> ResidencyState:
-    """Fill victim slot(s) with `page` (scalar indices, or vectors of
-    UNIQUE (set, way) pairs — `evict_order` prefixes qualify). Age is the
-    insert time, `ready` the (possibly future) arrival time — the
+    """Fill victim slot(s) with `page` (scalar indices, or vectors whose
+    GATED (set, way) pairs are unique — `evict_order` prefixes and
+    `landing_victims` outputs qualify). Gated-off lanes are dropped from
+    the scatter entirely (out-of-bounds + mode="drop"), so a masked lane
+    sharing a clamped target with a live one can never clobber it. Age is
+    the insert time, `ready` the (possibly future) arrival time — the
     in-flight tag — and the RRPV resets to the long-re-reference
     insertion prediction."""
     gate = jnp.asarray(gate, bool)
+    set_idx = jnp.asarray(set_idx, jnp.int32)
+    sdrop = jnp.where(gate, set_idx, res.page.shape[0])
 
     def put(tbl, val):
-        cur = tbl[set_idx, way]
-        return tbl.at[set_idx, way].set(
-            jnp.where(gate, jnp.broadcast_to(val, cur.shape), cur))
+        return tbl.at[sdrop, way].set(
+            jnp.broadcast_to(val, set_idx.shape), mode="drop")
 
     return ResidencyState(
         page=put(res.page, jnp.asarray(page, jnp.int32)),
@@ -276,6 +280,37 @@ def evict_order(res: ResidencyState, pol: PolicyFlags) -> jnp.ndarray:
     """All ways of a FULLY-ASSOCIATIVE tier (S=1) in eviction order —
     the store's multi-victim landing takes the first k. Stable, so equal
     scores keep slot order (the seed's stable age argsort)."""
+    return evict_order_sets(res, pol)[0]
+
+
+def evict_order_sets(res: ResidencyState, pol: PolicyFlags) -> jnp.ndarray:
+    """Every set's ways in eviction order: (S, W), row s listing the ways
+    of set s first-evicted-first. Scores (and the span/amin normalizers
+    of `_score`) are per set, so row 0 of an S=1 table is exactly
+    `evict_order` — the generalization the set-associative pool landing
+    consumes via `landing_victims`."""
     pol = as_policy(pol)
-    return jnp.argsort(_score(res.age[0], res.dirty[0], res.rrpv[0], pol),
-                       stable=True)
+    score = jax.vmap(lambda a, d, r: _score(a, d, r, pol))(
+        res.age, res.dirty, res.rrpv)
+    return jnp.argsort(score, axis=-1, stable=True)
+
+
+def landing_victims(res: ResidencyState, pids, pol: PolicyFlags
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Victim slots for a multi-page landing: lane j of `pids` (k,) takes
+    the rank-j victim *of its own set* (rank = j's position among
+    earlier same-set lanes), so distinct landed pages never collide on a
+    slot. Returns (sets, ways, ok) each (k,); `ok` is False for lanes
+    whose set already absorbed W landings this step (same-set overflow —
+    those migrations drop, like the >N-landings path; impossible at S=1
+    where k <= W by construction). With S=1 this is exactly the seed's
+    positional assignment `evict_order(res, pol)[:k]`."""
+    pol = as_policy(pol)
+    w = res.page.shape[-1]
+    sets = set_index(res, jnp.maximum(jnp.asarray(pids, jnp.int32), 0))
+    lane = jnp.arange(sets.shape[0])
+    rank = jnp.sum((sets[None, :] == sets[:, None])
+                   & (lane[None, :] < lane[:, None]), axis=1)
+    ok = rank < w
+    ways = evict_order_sets(res, pol)[sets, jnp.minimum(rank, w - 1)]
+    return sets, ways, ok

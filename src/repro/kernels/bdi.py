@@ -35,7 +35,7 @@ def _decompress_kernel(base_ref, delta_ref, ok_ref, raw_ref, o_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def bdi_compress(x2d_i32, *, interpret: bool = True):
+def bdi_compress(x2d_i32, *, interpret: bool = False):
     """(N,B) int32 -> (base (N,1) i32, deltas (N,B) i8, ok (N,1) i8)."""
     n, b = x2d_i32.shape
     assert n % TILE_N == 0
@@ -55,7 +55,7 @@ def bdi_compress(x2d_i32, *, interpret: bool = True):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def bdi_decompress(base, deltas, ok, raw, *, interpret: bool = True):
+def bdi_decompress(base, deltas, ok, raw, *, interpret: bool = False):
     n, b = deltas.shape
     assert n % TILE_N == 0
     grid = (n // TILE_N,)

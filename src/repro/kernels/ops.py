@@ -14,6 +14,7 @@ from repro.kernels import bdi as _bdi
 from repro.kernels import paged_gather as _pg
 from repro.kernels import qdq_int8 as _qdq
 from repro.kernels import ref as _ref
+from repro.kernels import residency_fused as _rf
 
 
 def _on_tpu() -> bool:
@@ -53,5 +54,28 @@ def paged_gather(pool, idx, impl: str = "auto"):
     return _ref.paged_gather(pool, idx)
 
 
-def paged_scatter(pool, idx, pages):
-    return _pg.paged_scatter(pool, idx, pages)
+def paged_scatter(pool, idx, pages, *, mode=None):
+    """Page-plane pool writeback — XLA's native scatter on every backend
+    (no Pallas twin; see paged_gather.py's note: the bulk page plane is
+    off the critical path). Inside a jitted step XLA updates the pool
+    in place; this is the entry the fused transaction's ref path uses.
+    mode="drop" = masked-lane convention (out-of-bounds rows no-op)."""
+    return _ref.paged_scatter(pool, idx, pages, mode=mode)
+
+
+def residency_fused(res, kpool, vpool, remote_k, remote_v, landed,
+                    landed_pages, needed_pages, needed_writes, clock, pol,
+                    impl: str = "auto"):
+    """The fused per-step residency transaction (landing + victim
+    selection + writeback enqueue + pool scatter + CAM probe + hit
+    gather + policy touch) — see ref.fused_residency_step for the
+    contract. impl: "auto" | "pallas" | "ref"; interpret mode is
+    reserved for kernel validation (tests), never production graphs."""
+    if impl == "pallas" or (impl == "auto" and _on_tpu()):
+        return _rf.fused_residency_step(
+            res, kpool, vpool, remote_k, remote_v, landed, landed_pages,
+            needed_pages, needed_writes, clock, pol,
+            interpret=not _on_tpu())
+    return _ref.fused_residency_step(
+        res, kpool, vpool, remote_k, remote_v, landed, landed_pages,
+        needed_pages, needed_writes, clock, pol)

@@ -27,7 +27,7 @@ def _gather_kernel(idx_ref, pool_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def paged_gather(pool, idx, *, interpret: bool = True):
+def paged_gather(pool, idx, *, interpret: bool = False):
     """pool: (P, page, H, D); idx: (L,) int32 -> (L, page, H, D)."""
     p, page, h, d = pool.shape
     l = idx.shape[0]
@@ -47,13 +47,11 @@ def paged_gather(pool, idx, *, interpret: bool = True):
     )(idx, pool)
 
 
-@functools.partial(jax.jit, donate_argnums=0)
-def paged_scatter(pool, idx, pages):
-    """Write `pages` (L, page, H, D) into pool rows idx.
-
-    The bulk page plane runs *off* the critical path (DaeMon §4.1), so XLA's
-    native scatter (donated, in-place) is already bandwidth-optimal here —
-    a Pallas kernel would buy nothing. The gather above is the critical
-    sub-block plane and is the kernel.
-    """
-    return pool.at[idx].set(pages)
+# There is deliberately NO Pallas paged_scatter twin: the bulk page plane
+# runs *off* the critical path (DaeMon §4.1), and inside the jitted step
+# XLA's native scatter already updates the pool buffer in place — a
+# donated wrapper or a Pallas kernel buys nothing there (measured; see
+# EXPERIMENTS.md "Kernel plane"). The writeback entry is
+# ops.paged_scatter -> ref.paged_scatter; the fused transaction kernel
+# (residency_fused.py) does its landing scatter via in-kernel DMA. The
+# gather above is the critical sub-block plane and is the kernel.

@@ -31,7 +31,7 @@ def _dequant_kernel(q_ref, s_ref, o_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def quantize_block_int8(x2d, *, interpret: bool = True):
+def quantize_block_int8(x2d, *, interpret: bool = False):
     """x2d: (N, B) float -> (q (N,B) int8, scale (N,1) f32)."""
     n, b = x2d.shape
     assert n % TILE_N == 0, f"rows {n} must tile by {TILE_N}"
@@ -50,7 +50,7 @@ def quantize_block_int8(x2d, *, interpret: bool = True):
 
 @functools.partial(jax.jit, static_argnames=("interpret", "out_dtype"))
 def dequantize_block_int8(q, scale, *, out_dtype=jnp.float32,
-                          interpret: bool = True):
+                          interpret: bool = False):
     n, b = q.shape
     assert n % TILE_N == 0
     grid = (n // TILE_N,)

@@ -9,6 +9,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import residency
+
 F32 = jnp.float32
 
 
@@ -53,9 +55,92 @@ def paged_gather(pool, idx):
     return pool[idx]
 
 
-def paged_scatter(pool, idx, pages):
-    """Inverse: write pages back into the pool at idx."""
-    return pool.at[idx].set(pages)
+def paged_scatter(pool, idx, pages, *, mode=None):
+    """Inverse: write pages back into the pool at idx. mode="drop" makes
+    out-of-bounds rows no-ops — the masked-lane convention the fused
+    transaction uses (a gated-off lane must never clobber a live one
+    that shares its clamped slot)."""
+    return pool.at[idx].set(pages, mode=mode)
+
+
+def fused_residency_step(res, kpool, vpool, remote_k, remote_v, landed,
+                         landed_pages, needed_pages, needed_writes, clock,
+                         pol):
+    """The whole per-step residency transaction, fused — pure-jnp oracle.
+
+    Landing (victim selection + dirty-eviction enqueue + pool scatter of
+    the arrived remote pages) followed by the CAM lookup (probe with the
+    `ready` in-flight gate, hit-path pool gather, policy touch + dirty
+    propagation) — the store's `_land` + `_lookup` arithmetic as ONE op.
+    Composed from the same residency primitives the legacy chain uses,
+    so it is bit-identical to the chain by construction (pinned by
+    tests/test_residency_fused.py); `residency_fused.fused_residency_step`
+    is the Pallas kernel validated against this.
+
+    Batched: `res` leaves (B, S, W); kpool/vpool (B, N, page, KV, D) with
+    N = S*W flat slots; landed/landed_pages (B, P) from `poll_arrivals`;
+    needed_pages/needed_writes (B, R); remote_k/remote_v (PR, page, KV, D)
+    shared across the batch; `clock` scalar; `pol` traced PolicyFlags.
+
+    Returns (res', kpool', vpool', evicted (B, k) i32 dirty-evicted page
+    ids (-1 pad), n_evictions (B,) f32, k_local/v_local (B, R, page, KV,
+    D), local_hit (B, R) bool). More than W same-set landings on one step
+    drop the overflow (the >N-landings rule); at S=1 this cannot happen.
+    """
+    pol = residency.as_policy(pol)
+
+    def one(res, kpool, vpool, landed, lpages, needed, writes):
+        s_sets, w_ways = res.page.shape
+        n = s_sets * w_ways
+        k_land = min(int(landed.shape[0]), n)
+        no_evict = jnp.full((k_land,), -1, jnp.int32)
+
+        def do_land(args):
+            res, kpool, vpool = args
+            order = jnp.argsort(jnp.logical_not(landed).astype(jnp.int32),
+                                stable=True)
+            pick = order[:k_land]
+            do = landed[pick]
+            pids = lpages[pick]
+            page_k = paged_gather(remote_k, jnp.maximum(pids, 0)).astype(
+                kpool.dtype)
+            page_v = paged_gather(remote_v, jnp.maximum(pids, 0)).astype(
+                vpool.dtype)
+            sets, vways, ok = residency.landing_victims(res, pids, pol)
+            do = do & ok
+            vict_page = res.page[sets, vways]
+            resident = vict_page >= 0
+            evicted = jnp.where(do & res.dirty[sets, vways] & resident,
+                                vict_page, no_evict)
+            n_ev = jnp.sum(do & resident).astype(F32)
+            vslot = jnp.where(do, sets * w_ways + vways, n)
+            kpool = paged_scatter(kpool, vslot, page_k, mode="drop")
+            vpool = paged_scatter(vpool, vslot, page_v, mode="drop")
+            res = residency.insert(res, sets, vways, pids, now=clock,
+                                   ready=clock, dirty=False, gate=do)
+            return (res, kpool, vpool), evicted, n_ev
+
+        (res, kpool, vpool), evicted, n_ev = jax.lax.cond(
+            jnp.any(landed), do_land,
+            lambda args: (args, no_evict, jnp.zeros((), F32)),
+            (res, kpool, vpool))
+
+        present, set_idx, way, ready_ok = residency.lookup(res, needed,
+                                                           clock)
+        local_hit = present & ready_ok
+        slot = set_idx * w_ways + way
+        k_local = paged_gather(kpool, jnp.maximum(slot, 0))
+        v_local = paged_gather(vpool, jnp.maximum(slot, 0))
+        res = residency.touch(res, set_idx, way, clock, pol,
+                              gate=local_hit)
+        res = residency.mark_dirty(res, set_idx, way, writes,
+                                   gate=local_hit)
+        return res, kpool, vpool, evicted, n_ev, k_local, v_local, \
+            local_hit
+
+    return jax.vmap(one)(res, kpool, vpool, landed, landed_pages,
+                         jnp.asarray(needed_pages, jnp.int32),
+                         jnp.asarray(needed_writes, bool))
 
 
 def decode_attention_paged(q, kpages, vpages, page_table, lengths):

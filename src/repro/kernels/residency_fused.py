@@ -1,0 +1,279 @@
+"""Pallas TPU kernel: the fused residency-engine transaction.
+
+ONE kernel per decode step executes the store's whole local-tier hot
+path (DESIGN.md §9): landing compaction, policy-scored victim selection,
+dirty-eviction enqueue into the writeback list, landed-page pool scatter,
+set-associative CAM probe with the `ready` in-flight gate, hit-path pool
+gather, and the policy touch / dirty-bit metadata updates — replacing
+the seven-op jnp chain (`daemon_store._land` + `_lookup`). The grid is
+the batch: grid step b transacts sequence b's table against the shared
+remote tier.
+
+Data placement: table metadata (page/age/ready/dirty/rrpv, (S, W) per
+sequence) rides VMEM blocks; the KV pools, the remote tier and the
+per-request output pages stay in HBM (`pltpu.ANY`) and move ONLY via
+per-row async copies (`pltpu.make_async_copy`) at in-kernel computed
+slots — landed pages DMA remote->pool at the victim slot, hits DMA
+pool->output at the probe slot, and the pools are aliased in-place
+(`input_output_aliases`) so untouched rows never move. Replacement
+policy arrives as traced `PolicyFlags` data (lru / fifo / rrip /
+dirty-averse select by `jnp.where`), never Python branches — the one
+compiled kernel serves the whole policy lattice.
+
+Mosaic-safe construction: no gather / scatter / sort primitives inside
+the kernel. Victim ordering is stable-rank arithmetic (O(W^2) compares
+per set — the kernel targets set-associative geometries with modest W,
+e.g. 256x16), table reads/writes at computed indices are one-hot
+select/reduce, and the landing compaction is a positional-rank matrix.
+The pure-jnp oracle is `ref.fused_residency_step`; bit-identity across
+all four policies is pinned by tests/test_residency_fused.py (interpret
+mode — reserved for tests, never production graphs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import residency
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _iota(n: int) -> jnp.ndarray:
+    # TPU requires >= 2D iota; collapse after
+    return jax.lax.broadcasted_iota(I32, (n, 1), 0)[:, 0]
+
+
+def _make_kernel(s_sets: int, w_ways: int, p_inflight: int, k_land: int,
+                 n_req: int):
+    n_slots = s_sets * w_ways
+
+    def kernel(params_ref, page_ref, age_ref, ready_ref, dirty_ref,
+               rrpv_ref, landed_ref, lpage_ref, need_ref, write_ref,
+               kpool_ref, vpool_ref, rk_ref, rv_ref,
+               opage_ref, oage_ref, oready_ref, odirty_ref, orrpv_ref,
+               oevict_ref, onev_ref, ohit_ref,
+               okpool_ref, ovpool_ref, klocal_ref, vlocal_ref):
+        del kpool_ref, vpool_ref  # aliased: read/write via okpool/ovpool
+        b = pl.program_id(0)
+        clock = params_ref[0, 0]
+        tr_flag = params_ref[0, 1] > 0.5   # touch_refresh
+        dpen = params_ref[0, 2]            # dirty_penalty
+        rr_flag = params_ref[0, 3] > 0.5   # rrip
+
+        page = page_ref[0]                 # (S, W) i32
+        age = age_ref[0]
+        ready = ready_ref[0]
+        dirty = dirty_ref[0] > 0
+        rrpv = rrpv_ref[0]
+        landed = landed_ref[0] > 0         # (P,)
+        lpages = lpage_ref[0]
+        needed = need_ref[0]               # (R,)
+        writes = write_ref[0] > 0
+
+        iota_p = _iota(p_inflight)
+        iota_k = _iota(k_land)
+        iota_w = _iota(w_ways)
+        iota_n = _iota(n_slots)
+
+        # ---- landing compaction: lane j <- j-th landed slot (slot order)
+        li = landed.astype(I32)
+        n_landed = jnp.sum(li)
+        before = jnp.sum(li[None, :] * (iota_p[None, :]
+                                        < iota_p[:, None]).astype(I32),
+                         axis=1)                       # landed seen before i
+        sel = landed[None, :] & (before[None, :] == iota_k[:, None])
+        do = iota_k < n_landed                         # (k,)
+        pids = jnp.where(do, jnp.sum(jnp.where(sel, lpages[None, :], 0),
+                                     axis=1), -1)
+
+        # ---- per-set stable eviction order (rank arithmetic == the
+        # stable argsort of residency.evict_order_sets)
+        amin = jnp.min(age, axis=1, keepdims=True)
+        span = jnp.max(age, axis=1, keepdims=True) - amin + 1.0
+        base = age + jnp.where(dirty, dpen * span, 0.0)
+        rrs = (residency.RRPV_MAX - rrpv) * span + (age - amin)
+        score = jnp.where(rr_flag, rrs, base)          # (S, W)
+        smaller = ((score[:, None, :] < score[:, :, None])
+                   | ((score[:, None, :] == score[:, :, None])
+                      & (iota_w[None, None, :] < iota_w[None, :, None])))
+        rank_w = jnp.sum(smaller.astype(I32), axis=2)  # way w's position
+        order = jnp.sum(iota_w[None, None, :]
+                        * (rank_w[:, None, :]
+                           == iota_w[None, :, None]).astype(I32),
+                        axis=2)                        # (S, pos) -> way
+
+        # ---- victim assignment: lane j takes its set's rank-j victim
+        sets = jnp.where(pids >= 0, pids, 0) % s_sets  # (k,)
+        same_before = ((sets[None, :] == sets[:, None])
+                       & (iota_k[None, :] < iota_k[:, None]))
+        lane_rank = jnp.sum(same_before.astype(I32), axis=1)
+        do = do & (lane_rank < w_ways)                 # same-set overflow
+        rankc = jnp.minimum(lane_rank, w_ways - 1)
+        set_oh = sets[:, None] == _iota(s_sets)[None, :]      # (k, S)
+        pos_oh = rankc[:, None] == iota_w[None, :]            # (k, W)
+        sel3 = set_oh[:, :, None] & pos_oh[:, None, :]        # (k, S, W)
+        vway = jnp.sum(jnp.where(sel3, order[None], 0), axis=(1, 2))
+        vpos = set_oh[:, :, None] & (vway[:, None, None]
+                                     == iota_w[None, None, :])
+        vict_page = jnp.sum(jnp.where(vpos, page[None], 0), axis=(1, 2))
+        vict_dirty = jnp.sum(jnp.where(vpos, dirty[None].astype(I32), 0),
+                             axis=(1, 2)) > 0
+        resident = vict_page >= 0
+        oevict_ref[0] = jnp.where(do & vict_dirty & resident, vict_page,
+                                  -1)
+        onev_ref[0, 0] = jnp.sum((do & resident).astype(F32))
+
+        # ---- insert landed pages (clean remote copies, ready = clock)
+        ins = vpos & do[:, None, None]                 # (k, S, W)
+        ins_any = jnp.any(ins, axis=0)
+        ins_pid = jnp.sum(jnp.where(ins, pids[:, None, None], 0), axis=0)
+        page2 = jnp.where(ins_any, ins_pid, page)
+        age2 = jnp.where(ins_any, clock, age)
+        ready2 = jnp.where(ins_any, clock, ready)
+        dirty2 = jnp.where(ins_any, False, dirty)
+        rrpv2 = jnp.where(ins_any, residency.RRPV_INSERT, rrpv)
+
+        # ---- CAM probe (after insert: a page landing this step hits now)
+        pflat = page2.reshape(n_slots)
+        match = pflat[None, :] == needed[:, None]      # (R, N)
+        present = jnp.any(match, axis=1)
+        loc = jnp.min(jnp.where(match, iota_n[None, :], n_slots), axis=1)
+        slot = jnp.where(present, loc, (needed % s_sets) * w_ways)
+        slot_oh = slot[:, None] == iota_n[None, :]     # (R, N)
+        ready_at = jnp.sum(jnp.where(slot_oh, ready2.reshape(n_slots
+                                                             )[None, :],
+                                     0.0), axis=1)
+        hit = present & (ready_at <= clock)
+        ohit_ref[0] = hit.astype(I32)
+
+        # ---- policy touch + dirty propagation on hits
+        hit_oh = slot_oh & hit[:, None]
+        age3 = jnp.maximum(age2.reshape(n_slots),
+                           jnp.max(jnp.where(hit_oh & tr_flag, clock,
+                                             0.0), axis=0))
+        rrpv3 = jnp.minimum(rrpv2.reshape(n_slots),
+                            jnp.min(jnp.where(hit_oh, residency.RRPV_HIT,
+                                              residency.RRPV_MAX),
+                                    axis=0))
+        dirty3 = dirty2.reshape(n_slots) | jnp.any(hit_oh
+                                                   & writes[:, None],
+                                                   axis=0)
+        opage_ref[0] = page2
+        oage_ref[0] = age3.reshape(s_sets, w_ways)
+        oready_ref[0] = ready2
+        odirty_ref[0] = dirty3.reshape(s_sets, w_ways).astype(I32)
+        orrpv_ref[0] = rrpv3.reshape(s_sets, w_ways)
+
+        # ---- data movement: landed pages remote -> pool (victim slots)
+        vslot = sets * w_ways + vway
+
+        def land_body(j, carry):
+            @pl.when(do[j])
+            def _():
+                def copies(ksem, vsem):
+                    ck = pltpu.make_async_copy(
+                        rk_ref.at[pids[j]], okpool_ref.at[b, vslot[j]],
+                        ksem)
+                    cv = pltpu.make_async_copy(
+                        rv_ref.at[pids[j]], ovpool_ref.at[b, vslot[j]],
+                        vsem)
+                    ck.start()
+                    cv.start()
+                    ck.wait()
+                    cv.wait()
+                pl.run_scoped(copies, pltpu.SemaphoreType.DMA(()),
+                              pltpu.SemaphoreType.DMA(()))
+            return carry
+
+        jax.lax.fori_loop(0, k_land, land_body, 0)
+
+        # ---- hit-path gather: pool (post-landing) -> per-request output
+        def gather_body(r, carry):
+            def copies(ksem, vsem):
+                ck = pltpu.make_async_copy(
+                    okpool_ref.at[b, slot[r]], klocal_ref.at[b, r], ksem)
+                cv = pltpu.make_async_copy(
+                    ovpool_ref.at[b, slot[r]], vlocal_ref.at[b, r], vsem)
+                ck.start()
+                cv.start()
+                ck.wait()
+                cv.wait()
+            pl.run_scoped(copies, pltpu.SemaphoreType.DMA(()),
+                          pltpu.SemaphoreType.DMA(()))
+            return carry
+
+        jax.lax.fori_loop(0, n_req, gather_body, 0)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_residency_step(res, kpool, vpool, remote_k, remote_v, landed,
+                         landed_pages, needed_pages, needed_writes,
+                         clock, pol, *, interpret: bool = False):
+    """Batched fused residency transaction — Pallas twin of
+    `ref.fused_residency_step` (same signature + `interpret`, same
+    returns). Pools and the remote tier must share a dtype (the landing
+    DMA is a raw copy; the jnp chain's astype is a no-op there anyway).
+    """
+    pol = residency.as_policy(pol)
+    b, s_sets, w_ways = res.page.shape
+    n_slots = s_sets * w_ways
+    p_inflight = int(landed.shape[1])
+    n_req = int(needed_pages.shape[1])
+    k_land = min(p_inflight, n_slots)
+    row = tuple(kpool.shape[2:])           # (page, KV, D)
+    assert remote_k.dtype == kpool.dtype and remote_v.dtype == vpool.dtype
+
+    params = jnp.stack([jnp.asarray(clock, F32),
+                        jnp.asarray(pol.touch_refresh, F32),
+                        jnp.asarray(pol.dirty_penalty, F32),
+                        jnp.asarray(pol.rrip, F32)]).reshape(1, 4)
+    meta_spec = pl.BlockSpec((1, s_sets, w_ways), lambda i: (i, 0, 0))
+    vec = lambda m: pl.BlockSpec((1, m), lambda i: (i, 0))
+    any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+
+    outs = pl.pallas_call(
+        _make_kernel(s_sets, w_ways, p_inflight, k_land, n_req),
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, 4), lambda i: (0, 0)),
+                  meta_spec, meta_spec, meta_spec, meta_spec, meta_spec,
+                  vec(p_inflight), vec(p_inflight), vec(n_req),
+                  vec(n_req), any_spec, any_spec, any_spec, any_spec],
+        out_specs=[meta_spec, meta_spec, meta_spec, meta_spec, meta_spec,
+                   vec(k_land), pl.BlockSpec((1, 1), lambda i: (i, 0)),
+                   vec(n_req), any_spec, any_spec, any_spec, any_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s_sets, w_ways), I32),    # page
+            jax.ShapeDtypeStruct((b, s_sets, w_ways), F32),    # age
+            jax.ShapeDtypeStruct((b, s_sets, w_ways), F32),    # ready
+            jax.ShapeDtypeStruct((b, s_sets, w_ways), I32),    # dirty
+            jax.ShapeDtypeStruct((b, s_sets, w_ways), F32),    # rrpv
+            jax.ShapeDtypeStruct((b, k_land), I32),            # evicted
+            jax.ShapeDtypeStruct((b, 1), F32),                 # n_evict
+            jax.ShapeDtypeStruct((b, n_req), I32),             # local_hit
+            jax.ShapeDtypeStruct(kpool.shape, kpool.dtype),
+            jax.ShapeDtypeStruct(vpool.shape, vpool.dtype),
+            jax.ShapeDtypeStruct((b, n_req) + row, kpool.dtype),
+            jax.ShapeDtypeStruct((b, n_req) + row, vpool.dtype),
+        ],
+        input_output_aliases={10: 8, 11: 9},
+        interpret=interpret,
+    )(params, res.page, res.age, res.ready,
+      res.dirty.astype(I32), res.rrpv,
+      jnp.asarray(landed, I32), jnp.asarray(landed_pages, I32),
+      jnp.asarray(needed_pages, I32),
+      jnp.asarray(needed_writes, I32), kpool, vpool, remote_k, remote_v)
+
+    (opage, oage, oready, odirty, orrpv, evicted, n_ev, hit, okpool,
+     ovpool, k_local, v_local) = outs
+    res2 = residency.ResidencyState(page=opage, age=oage, ready=oready,
+                                    dirty=odirty > 0, rrpv=orrpv)
+    return (res2, okpool, ovpool, evicted, n_ev[:, 0], k_local, v_local,
+            hit > 0)

@@ -25,6 +25,11 @@ additionally serialized on its own NIC bank (two-leg pricing,
 `repro.core.compute_plane`) — the serving analogue of the paper's
 multiple-compute-components scaling axis (fig 22), and what
 `benchmarks/scaling.py` sweeps into BENCH_scale.json.
+
+All three loops serve the store's residency transaction through the
+fused kernel path by default — `KVStoreConfig.kernel_impl` (DESIGN.md
+§9) rides in on the `store_cfg` the caller passes, so pinning
+`kernel_impl="ref"`/`"chain"` here needs no loop changes.
 """
 from __future__ import annotations
 
