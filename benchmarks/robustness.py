@@ -34,7 +34,7 @@ from benchmarks.common import (SERVE_BATCH as BATCH,
                                SERVE_PAGES_PER_TENANT as PAGES_PER_TENANT,
                                TRACE_R, WARM_FRAC, csv_print, get_trace,
                                run_store_warmed)
-from repro.core import fabric
+from repro.core import fabric, telemetry
 from repro.core.daemon_store import KVStoreConfig, link_bytes_per_step
 from repro.core.fabric import FabricConfig
 from repro.core.params import DaemonParams, NetworkParams
@@ -49,6 +49,16 @@ PROFILES = ("constant", "burst", "degrade", "flap")
 # saturation (and per module) — exactly what no static point can do
 STATIC_RATIOS = (0.25, 0.50, 0.80)
 MODULES = 2
+
+# telemetry plane for the tail-latency columns (DESIGN.md §10,
+# EXPERIMENTS.md "Tail latency"): desim histograms warm-gated access
+# latency in NANOSECONDS (96 bins over [1ns, 100ms] — ~1.21x per bin,
+# tight enough that the p99-vs-mean claim isn't a binning artifact);
+# the store histograms per-request stall in DECODE STEPS
+DESIM_TELEMETRY = telemetry.TelemetryConfig(level="histogram", bins=96,
+                                            lat_lo=1.0, lat_hi=1e8)
+STORE_TELEMETRY = telemetry.TelemetryConfig(level="histogram", bins=96,
+                                            lat_lo=0.01, lat_hi=1e4)
 
 # ------------------------------------------------------------------ desim
 def desim_sweep(quick: bool = False, r: int = None) -> dict:
@@ -78,7 +88,8 @@ def desim_sweep(quick: bool = False, r: int = None) -> dict:
                          schedule=make_link_schedule(p, horizon, MODULES))
                 for p in PROFILES]
         res = simulate_lattice(scheme_list, SimConfig(num_mc=MODULES), tr,
-                               nets, w.comp_ratio)
+                               nets, w.comp_ratio,
+                               telemetry_cfg=DESIM_TELEMETRY)
         per = {}
         for j, prof in enumerate(PROFILES):
             times = {lab: res[i][j]["total_time_ns"]
@@ -86,17 +97,28 @@ def desim_sweep(quick: bool = False, r: int = None) -> dict:
             best_static = min(times[f"daemon@{rt}"]
                               for rt in STATIC_RATIOS)
             win = best_static / times["daemon-adaptive"]
-            per[prof] = {"total_time_ns": times,
-                         "adaptive_win": win}
+            per[prof] = {
+                "total_time_ns": times,
+                "adaptive_win": win,
+                # tail columns from the in-lattice latency histograms
+                "avg_access_ns": {lab: res[i][j]["avg_access_ns"]
+                                  for i, lab in enumerate(labels)},
+                "p50_access_ns": {lab: res[i][j]["p50_access_ns"]
+                                  for i, lab in enumerate(labels)},
+                "p99_access_ns": {lab: res[i][j]["p99_access_ns"]
+                                  for i, lab in enumerate(labels)},
+            }
             for i, lab in enumerate(labels):
                 rows.append([wl, prof, lab,
                              round(res[i][j]["total_time_ns"] / 1e6, 3),
-                             round(res[i][j]["hit_ratio"], 4)])
+                             round(res[i][j]["hit_ratio"], 4),
+                             round(res[i][j]["p50_access_ns"], 1),
+                             round(res[i][j]["p99_access_ns"], 1)])
         out[wl] = per
-    csv_print("robustness/desim: total time (ms) per link profile "
-              "(adaptive ratio vs static lattice)",
-              ["workload", "profile", "scheme", "total_ms", "hit_ratio"],
-              rows)
+    csv_print("robustness/desim: total time (ms) + access-latency tail "
+              "per link profile (adaptive ratio vs static lattice)",
+              ["workload", "profile", "scheme", "total_ms", "hit_ratio",
+               "p50_ns", "p99_ns"], rows)
     return out
 
 
@@ -134,7 +156,8 @@ def _store_cfg(adaptive: bool, ratio: float) -> KVStoreConfig:
         compress_pages=True, page_budget_per_step=32,
         daemon=DaemonParams(bw_ratio=ratio),
         adaptive_ratio=adaptive,
-        fabric=FabricConfig(num_modules=MODULES))
+        fabric=FabricConfig(num_modules=MODULES),
+        telemetry=STORE_TELEMETRY)
 
 
 def _run_store(cfg: KVStoreConfig, link, pages, offs) -> dict:
@@ -149,6 +172,10 @@ def _run_store(cfg: KVStoreConfig, link, pages, offs) -> dict:
     steps, warm = run["steps"], run["warm"]
     stall = float(np.max(np.asarray(state.seqs.stats["stall_steps"])
                          - run["stall_warm"]))
+    # warm-delta stall percentiles from the in-lattice histogram
+    # (recorded at the oracle boundary, so identical for every kernel_impl)
+    p50, p99 = telemetry.percentiles_from_state(
+        state.seqs.tel, [0.5, 0.99], base=run["warm_state"].seqs.tel)
     mean_lag = run["lag_sum"] / max(steps - warm, 1)
     decoded = BATCH * (steps - warm)
     hits = led["local_hits"] - led_warm["local_hits"]
@@ -159,6 +186,8 @@ def _run_store(cfg: KVStoreConfig, link, pages, offs) -> dict:
         "service_steps": (steps - warm) + mean_lag,
         "mean_lag_steps": mean_lag,
         "stall_steps": stall,          # mean per-request delay (secondary)
+        "stall_p50_steps": p50,
+        "stall_p99_steps": p99,
         "decoded": decoded,
         "wall_s": run["wall_s"],
         "hit_ratio": hits / max(reqs, 1.0),
@@ -225,9 +254,30 @@ def robust_sweep(quick: bool = False) -> dict:
     headline["adaptive_beats_best_static_both_planes"] = bool(
         headline["desim_best_win"] > 1.0
         and headline["store_best_win"] > 1.0)
+    # tail-latency headline (EXPERIMENTS.md "Tail latency"): on the
+    # steady link, daemon's p99 access-latency win over page-granularity
+    # movement should be at least as large as its mean win — sub-block
+    # pipelining shortens the *worst* accesses most. min over workloads
+    # so the claim holds for every trace, not a lucky one.
+    tails = []
+    for per in desim.values():
+        cell = per["constant"]
+        p99_win = cell["p99_access_ns"]["remote"] / \
+            cell["p99_access_ns"]["daemon@0.25"]
+        mean_win = cell["avg_access_ns"]["remote"] / \
+            cell["avg_access_ns"]["daemon@0.25"]
+        tails.append((p99_win, mean_win, p99_win / mean_win))
+    worst = min(tails, key=lambda t: t[2])
+    headline["tail_p99_win"] = worst[0]
+    headline["tail_mean_win"] = worst[1]
+    headline["tail_vs_mean"] = worst[2]
     print(f"# robustness headline: desim adaptive win "
           f"{headline['desim_best_win']:.3f}x, store "
           f"{headline['store_best_win']:.3f}x (vs best static ratio)")
+    print(f"# tail headline: daemon p99 access win "
+          f"{headline['tail_p99_win']:.2f}x vs mean win "
+          f"{headline['tail_mean_win']:.2f}x (p99/mean ratio "
+          f"{headline['tail_vs_mean']:.3f})")
     return {"quick": quick, "profiles": list(PROFILES),
             "static_ratios": list(STATIC_RATIOS),
             "desim": desim, "store": store,

@@ -101,7 +101,8 @@ def main() -> None:
     if want("fig21"):
         figures.fig21_bw_factor(r)
     if want("serve"):
-        sv = serving.serve_sweep(quick=args.quick, impl=args.impl)
+        sv = serving.serve_sweep(quick=args.quick, impl=args.impl,
+                                 trace_path="TRACE_serve.json")
         assert_bench_schema(BENCH_SERVE_JSON.name, sv)
         BENCH_SERVE_JSON.write_text(json.dumps(sv, indent=2) + "\n")
         print(f"# BENCH_serve.json written: "
@@ -110,14 +111,21 @@ def main() -> None:
               f"hit {sv['hit_ratio']:.3f}, "
               f"fused_vs_ref_tokens_ratio "
               f"{sv['fused_vs_ref_tokens_ratio']:.3f}")
+        print(f"# serve tail: stall p50 {sv['stall_p50_steps']:.2f} / "
+              f"p99 {sv['stall_p99_steps']:.2f} steps "
+              f"(trace: {sv['trace_file']})")
     if want("robust"):
         rb = robustness.robust_sweep(quick=args.quick)
         assert_bench_schema(BENCH_ROBUST_JSON.name, rb)
         BENCH_ROBUST_JSON.write_text(json.dumps(rb, indent=2) + "\n")
         hl = rb["headline"]
+        values["daemon_tail_vs_mean"] = hl["tail_vs_mean"]
         print(f"# BENCH_robust.json written: adaptive-vs-best-static "
               f"desim {hl['desim_best_win']:.3f}x, "
               f"store {hl['store_best_win']:.3f}x")
+        print(f"# robust tail: daemon p99 win {hl['tail_p99_win']:.2f}x "
+              f">= mean win {hl['tail_mean_win']:.2f}x "
+              f"(ratio {hl['tail_vs_mean']:.3f})")
     if want("scale"):
         sc = scaling.scale_sweep(quick=args.quick,
                                  desim=f22["desim"] if f22 else None)

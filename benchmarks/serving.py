@@ -21,16 +21,27 @@ per second; methodology in EXPERIMENTS.md "Kernel plane").
 """
 from __future__ import annotations
 
+import jax
 import numpy as np
 
 from benchmarks.common import (SERVE_BATCH as BATCH,
                                SERVE_PAGES_PER_TENANT as PAGES_PER_TENANT,
                                csv_print, run_store_warmed)
-from repro.core.daemon_store import KVStoreConfig
+from repro.core import telemetry
+from repro.core.daemon_store import SERIES_CHANNELS, KVStoreConfig
 from repro.core.fabric import FabricConfig
 from repro.core.params import DaemonParams
+from repro.runtime import obs
 
 WIDTH = 4                 # page requests per tenant per decode step
+
+# the main tenant sweep runs with the telemetry plane at "histogram":
+# per-tenant stall histograms feed the p50/p99 service-lag columns in
+# BENCH_serve.json (unit: decode steps). The hot-path `kernel_sweep`
+# stays at "off" — it times the residency transaction, and must keep
+# comparing impls on the exact pre-telemetry program.
+SERVE_TELEMETRY = telemetry.TelemetryConfig(
+    level="histogram", lat_lo=0.01, lat_hi=1e4, series_cap=256)
 
 SWEEP = (
     # (label, compress, modules, placement)
@@ -58,7 +69,7 @@ def _store_cfg(compress: bool, modules: int, placement: str,
     return KVStoreConfig(
         num_local_pages=16, page_tokens=16, kv_heads=4, head_dim=64,
         compress_pages=compress, page_budget_per_step=8,
-        kernel_impl=impl,
+        kernel_impl=impl, telemetry=SERVE_TELEMETRY,
         fabric=FabricConfig(num_modules=modules, placement=placement,
                             affinity_block=PAGES_PER_TENANT))
 
@@ -84,21 +95,25 @@ def _tenant_streams(steps: int, seed: int = 0):
 
 
 def _run_one(cfg: KVStoreConfig, pages, offs, batch: int = BATCH,
-             n_remote: int = None) -> dict:
+             n_remote: int = None, collect: dict = None) -> dict:
     """One sweep point. Throughput and hit ratio are *warmup-gated*: the
     first WARM_FRAC of the steps (cold pools, compile) are excluded from
     tokens_per_s and hit_ratio — the same gating desim applies to its
     latency/hit stats (`common.run_store_warmed`, shared with the
     robustness sweep), so BENCH_serve.json is comparable across runs and
     trace lengths. Byte/move totals still cover the whole run (they feed
-    the conservation checks)."""
+    the conservation checks). With the telemetry plane at histogram+
+    the row gains `stall_p50_steps`/`stall_p99_steps` — warm-delta
+    service-lag percentiles from the per-tenant stall histograms.
+    `collect` (optional dict) receives the raw `run_store_warmed` result
+    (final + warm states) for the Perfetto trace export."""
     n_remote = n_remote or BATCH * PAGES_PER_TENANT
     run = run_store_warmed(cfg, pages, offs, n_remote)
     led, led_warm, warm = run["led"], run["led_warm"], run["warm"]
     decoded = batch * (run["steps"] - warm)
     hits = led["local_hits"] - led_warm["local_hits"]
     reqs = led["requests"] - led_warm["requests"]
-    return {
+    out = {
         "tokens_per_s": decoded / max(run["wall_s"], 1e-9),
         "wire_bytes": led["wire_bytes"],
         "uncompressed_bytes": led["uncompressed_bytes"],
@@ -108,6 +123,15 @@ def _run_one(cfg: KVStoreConfig, pages, offs, batch: int = BATCH,
         "module_bytes": led["module_bytes"],
         "warm_steps": warm,
     }
+    tel = run["state"].seqs.tel
+    if tel is not None and cfg.telemetry.histogram_on:
+        p50, p99 = telemetry.percentiles_from_state(
+            tel, [0.5, 0.99], base=run["warm_state"].seqs.tel)
+        out["stall_p50_steps"] = p50
+        out["stall_p99_steps"] = p99
+    if collect is not None:
+        collect["run"] = run
+    return out
 
 
 def _kernel_streams(steps: int, seed: int = 7):
@@ -143,18 +167,46 @@ def kernel_sweep(quick: bool = False, steps: int = None) -> list:
     return out
 
 
+def export_serve_trace(path: str, run: dict) -> None:
+    """Perfetto export of one warmed store run: warm/timed phase spans
+    on a steps-as-milliseconds timebase (the decode clock carries no
+    wall time inside the jitted step) + tenant-0's telemetry series as
+    counter tracks."""
+    steps, warm = run["steps"], run["warm"]
+    step_us = 1000.0                       # 1 decode step == 1 "ms"
+    spans = [
+        {"name": "warmup", "ph": "X", "ts": 0.0, "dur": warm * step_us,
+         "pid": 0, "tid": 0, "args": {"steps": warm}},
+        {"name": "timed", "ph": "X", "ts": warm * step_us,
+         "dur": (steps - warm) * step_us, "pid": 0, "tid": 0,
+         "args": {"steps": steps - warm}},
+    ]
+    tel0 = jax.tree.map(lambda x: x[0], run["state"].seqs.tel)
+    counters = obs.counter_events(tel0, SERVE_TELEMETRY,
+                                  list(SERIES_CHANNELS),
+                                  step_us=step_us)
+    obs.trace_export(path, spans=spans, counters=counters,
+                     metadata={"daemon-serve (tenant 0)": 0})
+
+
 def serve_sweep(quick: bool = False, steps: int = None,
-                impl: str = "auto") -> dict:
+                impl: str = "auto", trace_path: str = None) -> dict:
     """`impl` sets the hot-path implementation of the MAIN tenant sweep
     (`KVStoreConfig.kernel_impl` — the CI smoke pins "ref"); the
-    production-shape `kernel_sweep` always times auto-vs-chain."""
+    production-shape `kernel_sweep` always times auto-vs-chain.
+    `trace_path` (optional) writes a Perfetto-loadable Chrome trace of
+    the daemon/M=4 run (`export_serve_trace`) — the CI smoke's artifact."""
     steps = steps or (150 if quick else 400)
     pages, offs = _tenant_streams(steps)
     rows = []
     results = []
+    daemon4_run = {}
     for label, compress, modules, placement in SWEEP:
+        is_daemon4 = (label, modules, placement) == ("daemon", 4,
+                                                     "interleave")
         res = _run_one(_store_cfg(compress, modules, placement, impl),
-                       pages, offs)
+                       pages, offs,
+                       collect=daemon4_run if is_daemon4 else None)
         res.update(label=label, modules=modules, placement=placement,
                    kernel_impl=impl)
         results.append(res)
@@ -162,12 +214,14 @@ def serve_sweep(quick: bool = False, steps: int = None,
                      round(res["tokens_per_s"], 1),
                      round(res["wire_bytes"] / 1e6, 3),
                      round(res["hit_ratio"], 4),
+                     round(res.get("stall_p99_steps", 0.0), 2),
                      "/".join(f"{b/1e6:.2f}"
                               for b in res["module_bytes"])])
     csv_print(f"serve: batched store, B={BATCH} tenants x M modules "
               "(daemon vs remote-style wire bytes at equal service)",
               ["scheme", "modules", "placement", "tokens_per_s",
-               "wire_MB", "hit_ratio", "per_module_MB"], rows)
+               "wire_MB", "hit_ratio", "stall_p99", "per_module_MB"],
+              rows)
     kernel_rows = kernel_sweep(quick=quick)
     csv_print(f"serve-kernel: hot-path impl, B={KERNEL_BATCH} tenants x "
               f"{KERNEL_POOL_PAGES}-page pools "
@@ -181,12 +235,17 @@ def serve_sweep(quick: bool = False, steps: int = None,
     remote4 = next(r for r in results if r["label"] == "remote-style")
     fused = next(r for r in kernel_rows if r["kernel_impl"] == "auto")
     chain = next(r for r in kernel_rows if r["kernel_impl"] == "chain")
+    if trace_path and daemon4_run.get("run") is not None:
+        export_serve_trace(trace_path, daemon4_run["run"])
     return {
         "batch": BATCH, "steps": steps, "quick": quick, "impl": impl,
         "warm_steps": daemon4["warm_steps"],
         "tokens_per_s": daemon4["tokens_per_s"],
         "wire_bytes": daemon4["wire_bytes"],
         "hit_ratio": daemon4["hit_ratio"],
+        "stall_p50_steps": daemon4.get("stall_p50_steps"),
+        "stall_p99_steps": daemon4.get("stall_p99_steps"),
+        "trace_file": trace_path,
         "daemon_vs_remote_wire_ratio":
             daemon4["wire_bytes"] / max(remote4["wire_bytes"], 1e-9),
         "fused_vs_ref_tokens_ratio":

@@ -27,10 +27,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.daemon_store import (KVStoreConfig, init_kv_store_batch,
-                                     ledger, link_bytes_per_step,
+from repro.core import telemetry
+from repro.core.daemon_store import (SERIES_CHANNELS, KVStoreConfig,
+                                     init_kv_store_batch, ledger,
+                                     link_bytes_per_step,
                                      step_fetch_batch)
 from repro.core.fabric import FabricConfig, scheduled_link
+from repro.runtime import obs
 from repro.runtime.fault import LinkHealthMonitor
 from repro.sim.workloads import make_link_schedule
 from repro.models.model import ModelOptions, init_model
@@ -78,7 +81,11 @@ def tenant_capacity_demo(steps: int = 120):
     cfg = KVStoreConfig(num_local_pages=8, page_tokens=16, kv_heads=4,
                         head_dim=64, page_budget_per_step=8,
                         policy="lru",  # swap for any residency.POLICIES
-                        fabric=FabricConfig(num_modules=2))
+                        fabric=FabricConfig(num_modules=2),
+                        # full telemetry plane: per-tenant stall
+                        # histograms + series ring + host spans
+                        telemetry=telemetry.TelemetryConfig(
+                            level="trace", lat_lo=0.01, lat_hi=1e4))
     state = init_kv_store_batch(cfg, 2)
     remote = jnp.zeros((128, 16, 4, 64), jnp.bfloat16)
     rng = np.random.default_rng(0)
@@ -93,9 +100,12 @@ def tenant_capacity_demo(steps: int = 120):
     writes = np.ones((steps, 2, 4), bool)
     fetch = jax.jit(lambda st, need, off, wr: step_fetch_batch(
         st, cfg, remote, remote, need, off, wr))
-    for t in range(steps):
-        state, *_ = fetch(state, jnp.asarray(pages[t]),
-                          jnp.asarray(offs[t]), jnp.asarray(writes[t]))
+    rec = obs.SpanRecorder()
+    with rec.span("tenant_replay", steps=steps) as sp:
+        for t in range(steps):
+            state, *_ = fetch(state, jnp.asarray(pages[t]),
+                              jnp.asarray(offs[t]), jnp.asarray(writes[t]))
+        sp["sync"] = state.fab.page_busy
     stats = state.seqs.stats             # per-tenant (B,) leaves
     print(f"\n== residency plane: capacity-squeezed vs roomy tenant "
           f"(pool=8 slots each, policy={cfg.policy}, shared fabric) ==")
@@ -111,6 +121,23 @@ def tenant_capacity_demo(steps: int = 120):
     print(f"  shared fabric: wire={led['wire_bytes']/1e6:.2f}MB "
           f"per-module MB="
           f"{'/'.join(f'{b/1e6:.2f}' for b in led['module_bytes'])}")
+    print(f"  tail: stall p50={led['stall_p50_steps']:.3g} "
+          f"p90={led['stall_p90_steps']:.3g} "
+          f"p99={led['stall_p99_steps']:.3g} decode steps (both tenants)")
+    print(obs.summary("squeezed-vs-roomy tenants", state.seqs.tel,
+                      cfg.telemetry, SERIES_CHANNELS, unit="steps"))
+    # Perfetto export: the replay span over per-tenant counter tracks
+    # (synthetic steps-as-ms timebase) — drag onto ui.perfetto.dev
+    counters = []
+    for b, pid in ((0, 1), (1, 2)):
+        t0 = jax.tree.map(lambda x: x[b], state.seqs.tel)
+        counters += obs.counter_events(t0, cfg.telemetry,
+                                       SERIES_CHANNELS, pid=pid)
+    obs.trace_export("TRACE_tenants.json", spans=rec.events,
+                     counters=counters,
+                     metadata={"tenant-replay": 0, "tenant-0 squeezed": 1,
+                               "tenant-1 roomy": 2})
+    print("  trace written: TRACE_tenants.json (ui.perfetto.dev)")
 
 
 def main():

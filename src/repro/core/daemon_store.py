@@ -96,7 +96,8 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import bandwidth, compute_plane, fabric, residency
+from repro.core import (bandwidth, compute_plane, fabric, residency,
+                        telemetry)
 from repro.core.engine import (EngineState, find, gate_tree as _gate_tree,
                                init_engine_state, note_dirty_eviction,
                                poll_arrivals, retire_arrivals,
@@ -125,6 +126,13 @@ class KVStoreConfig:
     policy: str = "lru"           # pool replacement (residency.POLICIES)
     pool_ways: int = 0            # set-assoc pool geometry; 0 = fully assoc
     kernel_impl: str = "auto"     # hot-path impl: auto|pallas|ref|chain
+    # telemetry plane (DESIGN.md §10): STATIC level axis like
+    # `kernel_impl`. "off" (default) is bit-identical to the
+    # pre-telemetry store — `SeqState.tel` stays None, zero extra leaves
+    # or ops in the compiled steppers. Histogram unit: decode STEPS
+    # (per-request stall), so lat_lo/lat_hi default to a step range.
+    telemetry: telemetry.TelemetryConfig = telemetry.TelemetryConfig(
+        lat_lo=0.01, lat_hi=1e4)
 
     def __post_init__(self):
         if self.policy not in residency.POLICIES:
@@ -172,6 +180,11 @@ class SeqState(NamedTuple):
     # DaeMon movement plane (inflight page + sub-block CAMs, §4.2)
     eng: EngineState
     stats: dict
+    # telemetry plane (per-TENANT: replicated with the sequence, so a
+    # batched store carries one stall histogram + series ring per
+    # tenant); None when `cfg.telemetry.level == "off"` — a leafless
+    # pytree, the compiled steppers are unchanged
+    tel: telemetry.TelemetryState = None
 
     # flat (N,) views of the tier metadata (the store's historical slot
     # layout — callers and ledger readers keep indexing by pool slot)
@@ -256,6 +269,11 @@ STAT_KEYS = ("sub_block_fetches", "page_moves", "wire_bytes",
              "uncompressed_bytes", "local_hits", "requests", "stall_steps",
              "writeback_bytes", "dirty_evicts", "evictions")
 
+# per-decode-step series channels the telemetry ring samples (the
+# post-schedule fabric/stats view of the sequence's step)
+SERIES_CHANNELS = ("page_backlog_steps", "ratio", "hit_rate", "evictions",
+                   "writeback_bytes", "health")
+
 # hot-path implementations: "auto" = fused Pallas kernel on TPU, fused
 # jnp oracle elsewhere; "pallas"/"ref" force one fused side; "chain" =
 # the legacy per-primitive _land/_lookup op chain (kept as the
@@ -272,6 +290,7 @@ def _init_seq(cfg: KVStoreConfig) -> SeqState:
         res=residency.init_residency(*cfg.pool_geometry()),
         eng=init_engine_state(cfg.daemon),
         stats={k: jnp.zeros((), F32) for k in STAT_KEYS},
+        tel=telemetry.init_state(cfg.telemetry, len(SERIES_CHANNELS)),
     )
 
 
@@ -678,7 +697,29 @@ def _schedule(seq: SeqState, fab: FabricState, cfg: KVStoreConfig,
         "dirty_evicts": stt["dirty_evicts"] + n_wb,
         "evictions": stt["evictions"],     # accrued at landing (_land)
     }
-    return seq._replace(eng=eng, stats=stats), fab, nic
+
+    # ---- telemetry plane (DESIGN.md §10): recorded HERE, at the oracle
+    # boundary outside the fused residency kernel — stalls/hits/fabric
+    # state are stepper-level values, so the histogram and series are
+    # identical across every `kernel_impl` by construction ----
+    tel = seq.tel
+    tcfg = cfg.telemetry
+    if tel is not None and tcfg.enabled:
+        # per-request service lag in decode steps; hit requests
+        # contribute stall 0 (clamped into bin 0, "served now")
+        tel = telemetry.record_latency(tel, tcfg, stalls)
+        step_i = (clock - 1.0).astype(jnp.int32)
+        tel = telemetry.record_series(
+            tel, tcfg, step_i,
+            jnp.stack([
+                jnp.mean(jnp.maximum(fab.page_busy - clock, 0.0)),
+                jnp.mean(fab.ratio),
+                jnp.mean(local_hit.astype(F32)),
+                stats["evictions"],
+                stats["writeback_bytes"],
+                jnp.mean(fabric.module_health(fab.link, clock)),
+            ]))
+    return seq._replace(eng=eng, stats=stats, tel=tel), fab, nic
 
 
 def _offsets_or_zero(needed_pages, needed_offsets):
@@ -876,9 +917,19 @@ def step_fetch_replicated(state: ReplicatedKVStoreState,
 def ledger(state) -> dict:
     """Python-side movement summary: stats totals (summed over the batch
     for a Batched/ReplicatedKVStoreState) + the fabric's per-module wire
-    bytes (+ per-unit NIC bytes for a replicated store)."""
+    bytes (+ per-unit NIC bytes for a replicated store). When the
+    telemetry plane is on (`SeqState.tel` present), the batch-summed
+    stall histogram adds tail percentiles — `stall_p50_steps` /
+    `stall_p90_steps` / `stall_p99_steps` (self-contained: the bin edges
+    ride in the state, no config needed)."""
     seq = state.seq if isinstance(state, KVStoreState) else state.seqs
     out = {k: float(jnp.sum(v)) for k, v in seq.stats.items()}
+    if seq.tel is not None:
+        p50, p90, p99 = telemetry.percentiles_from_state(
+            seq.tel, [0.5, 0.9, 0.99])
+        out["stall_p50_steps"] = p50
+        out["stall_p90_steps"] = p90
+        out["stall_p99_steps"] = p99
     fab = state.fab
     out["module_bytes"] = [
         float(x) for x in fab.line_bytes + fab.page_bytes + fab.wb_bytes]

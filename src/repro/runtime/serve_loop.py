@@ -33,6 +33,7 @@ fused kernel path by default — `KVStoreConfig.kernel_impl` (DESIGN.md
 """
 from __future__ import annotations
 
+from contextlib import nullcontext
 from dataclasses import dataclass
 from functools import partial
 
@@ -64,6 +65,25 @@ class PagedServeConfig:
     pages_per_seq: int = 32   # remote-tier pages reserved per tenant
 
 
+def _maybe_recorder(recorder, store_cfg):
+    """The serve loops' span-capture policy: record when the caller
+    passes a `repro.runtime.obs.SpanRecorder`, or auto-create one when
+    the store's telemetry level is "trace" (the spans then come back in
+    the ledger as `trace_spans`). Span durations block on the phase's
+    outputs, so trace-level runs serialize the dispatch pipeline —
+    that cost is the reason span capture is the TOP telemetry level."""
+    if recorder is None and store_cfg is not None \
+            and store_cfg.telemetry.trace_on:
+        from repro.runtime.obs import SpanRecorder
+        recorder = SpanRecorder()
+    return recorder
+
+
+def _span(rec, name, **args):
+    """`rec.span(...)` or a no-op context yielding a writable dict."""
+    return nullcontext({}) if rec is None else rec.span(name, **args)
+
+
 def make_decode_fn(cfg: ArchConfig, opt: ModelOptions):
     @jax.jit
     def step(params, state, tokens, pos, key, temperature):
@@ -78,13 +98,15 @@ def make_decode_fn(cfg: ArchConfig, opt: ModelOptions):
 
 
 def serve_batch(params, cfg: ArchConfig, prompts, scfg: ServeConfig,
-                opt: ModelOptions = None):
+                opt: ModelOptions = None, recorder=None):
     """prompts: (B, P) int32. Returns (B, P + max_new_tokens) tokens.
 
     Prefill is run token-by-token through the same decode cell (exact, and
     exercises every recurrent family uniformly); production prefill for
     attention archs uses models.model.prefill (one pass) — both paths are
-    tested for equivalence.
+    tested for equivalence. `recorder` (optional
+    `repro.runtime.obs.SpanRecorder`) captures prefill/decode spans for
+    the Perfetto export.
     """
     opt = opt or ModelOptions(remat="none")
     b, p = prompts.shape
@@ -93,19 +115,24 @@ def serve_batch(params, cfg: ArchConfig, prompts, scfg: ServeConfig,
     step = make_decode_fn(cfg, opt)
     key = jax.random.PRNGKey(scfg.seed)
     out = [prompts]
-    tok = prompts[:, :1]
-    # prefill: feed prompt tokens
-    for i in range(p):
-        key, sub = jax.random.split(key)
-        nxt, state = step(params, state, prompts[:, i:i + 1], jnp.int32(i),
-                          sub, jnp.float32(scfg.temperature))
+    # zero-length prompts skip prefill and decode from a BOS-like token 0
+    nxt = jnp.zeros((b, 1), jnp.int32)
+    with _span(recorder, "prefill", tokens=p) as sp:
+        for i in range(p):
+            key, sub = jax.random.split(key)
+            nxt, state = step(params, state, prompts[:, i:i + 1],
+                              jnp.int32(i), sub,
+                              jnp.float32(scfg.temperature))
+        sp["sync"] = nxt
     tok = nxt
     gen = []
-    for i in range(scfg.max_new_tokens):
-        gen.append(tok)
-        key, sub = jax.random.split(key)
-        tok, state = step(params, state, tok, jnp.int32(p + i), sub,
-                          jnp.float32(scfg.temperature))
+    with _span(recorder, "decode", tokens=scfg.max_new_tokens) as sp:
+        for i in range(scfg.max_new_tokens):
+            gen.append(tok)
+            key, sub = jax.random.split(key)
+            tok, state = step(params, state, tok, jnp.int32(p + i), sub,
+                              jnp.float32(scfg.temperature))
+        sp["sync"] = tok
     return jnp.concatenate(out + gen, axis=1)
 
 
@@ -140,7 +167,7 @@ def serve_batch_paged(params, cfg: ArchConfig, prompts, scfg: ServeConfig,
                       store_cfg: KVStoreConfig,
                       pcfg: PagedServeConfig = PagedServeConfig(),
                       opt: ModelOptions = None, link=None,
-                      health_monitor=None):
+                      health_monitor=None, recorder=None):
     """Batched decode with the DaeMon movement plane in the loop.
 
     Runs the same prefill + decode schedule as `serve_batch`, and per
@@ -158,9 +185,17 @@ def serve_batch_paged(params, cfg: ArchConfig, prompts, scfg: ServeConfig,
     advised mid-run (a degraded module should shed its pages, the
     serving analogue of `StragglerDetector.should_reshard`).
 
+    `recorder` (optional `repro.runtime.obs.SpanRecorder`) captures
+    prefill/decode-step spans; with `store_cfg.telemetry.level="trace"`
+    one is auto-created and the spans come back in the ledger as
+    `trace_spans` (ready for `obs.trace_export`). The store's own
+    histogram/series telemetry rides in on `store_cfg.telemetry` like
+    `kernel_impl` does — ledger percentile columns need no loop changes.
+
     Returns (tokens (B, P + max_new_tokens), ledger dict).
     """
     opt = opt or ModelOptions(remat="none")
+    recorder = _maybe_recorder(recorder, store_cfg)
     b, p = prompts.shape
     max_len = p + scfg.max_new_tokens
     state, _ = init_decode_state(cfg, b, max_len, opt)
@@ -200,31 +235,46 @@ def serve_batch_paged(params, cfg: ArchConfig, prompts, scfg: ServeConfig,
         return kv_state
 
     out = [prompts]
-    for i in range(p):
-        key, sub = jax.random.split(key)
-        nxt, state = step(params, state, prompts[:, i:i + 1], jnp.int32(i),
-                          sub, jnp.float32(scfg.temperature))
-        kv = kv_step(kv, jnp.int32(i))
-        watch_health(i + 1)
+    # zero-length prompts skip prefill and decode from a BOS-like token 0
+    nxt = jnp.zeros((b, 1), jnp.int32)
+    with _span(recorder, "prefill", tokens=p) as sp:
+        for i in range(p):
+            key, sub = jax.random.split(key)
+            nxt, state = step(params, state, prompts[:, i:i + 1],
+                              jnp.int32(i), sub,
+                              jnp.float32(scfg.temperature))
+            kv = kv_step(kv, jnp.int32(i))
+            watch_health(i + 1)
+        sp["sync"] = (nxt, kv.fab.page_busy)
     tok = nxt
     gen = []
-    for i in range(scfg.max_new_tokens):
-        gen.append(tok)
-        key, sub = jax.random.split(key)
-        tok, state = step(params, state, tok, jnp.int32(p + i), sub,
-                          jnp.float32(scfg.temperature))
-        kv = kv_step(kv, jnp.int32(p + i))
-        watch_health(p + i + 1)
+    with _span(recorder, "decode", tokens=scfg.max_new_tokens) as sp:
+        for i in range(scfg.max_new_tokens):
+            gen.append(tok)
+            key, sub = jax.random.split(key)
+            with _span(recorder, "decode_step", tid=1, step=i) as s2:
+                tok, state = step(params, state, tok, jnp.int32(p + i),
+                                  sub, jnp.float32(scfg.temperature))
+                kv = kv_step(kv, jnp.int32(p + i))
+                s2["sync"] = (tok, kv.fab.page_busy)
+            watch_health(p + i + 1)
+        sp["sync"] = tok
     led = store_ledger(kv)
     if health_monitor is not None:
         led["link_reshard_modules"] = sorted(reshard_advised)
+    if recorder is not None:
+        led["trace_spans"] = recorder.events
+    if kv.seqs.tel is not None:
+        # raw per-tenant telemetry state (jnp pytree, NOT json) for the
+        # examples' obs export; json writers must pop it first
+        led["_tel"] = kv.seqs.tel
     return jnp.concatenate(out + gen, axis=1), led
 
 
 def serve_replicated(params, cfg: ArchConfig, prompts, scfg: ServeConfig,
                      store_cfg: KVStoreConfig, num_replicas: int,
                      pcfg: PagedServeConfig = PagedServeConfig(),
-                     opt: ModelOptions = None, link=None):
+                     opt: ModelOptions = None, link=None, recorder=None):
     """Replicated serving: C serving replicas x B tenants each, one
     shared memory-side fabric (the compute plane, DESIGN.md §7).
 
@@ -241,6 +291,7 @@ def serve_replicated(params, cfg: ArchConfig, prompts, scfg: ServeConfig,
     per-module `module_bytes` and per-replica `unit_bytes`).
     """
     opt = opt or ModelOptions(remat="none")
+    recorder = _maybe_recorder(recorder, store_cfg)
     c = num_replicas
     b, p = prompts.shape
     flat_prompts = jnp.tile(prompts, (c, 1))             # (C*B, P)
@@ -270,19 +321,30 @@ def serve_replicated(params, cfg: ArchConfig, prompts, scfg: ServeConfig,
         return kv_state
 
     out = [flat_prompts]
-    for i in range(p):
-        key, sub = jax.random.split(key)
-        nxt, state = step(params, state, flat_prompts[:, i:i + 1],
-                          jnp.int32(i), sub,
-                          jnp.float32(scfg.temperature))
-        kv = kv_step(kv, jnp.int32(i))
+    # zero-length prompts skip prefill and decode from a BOS-like token 0
+    nxt = jnp.zeros((c * b, 1), jnp.int32)
+    with _span(recorder, "prefill", tokens=p) as sp:
+        for i in range(p):
+            key, sub = jax.random.split(key)
+            nxt, state = step(params, state, flat_prompts[:, i:i + 1],
+                              jnp.int32(i), sub,
+                              jnp.float32(scfg.temperature))
+            kv = kv_step(kv, jnp.int32(i))
+        sp["sync"] = (nxt, kv.fab.page_busy)
     tok = nxt
     gen = []
-    for i in range(scfg.max_new_tokens):
-        gen.append(tok)
-        key, sub = jax.random.split(key)
-        tok, state = step(params, state, tok, jnp.int32(p + i), sub,
-                          jnp.float32(scfg.temperature))
-        kv = kv_step(kv, jnp.int32(p + i))
+    with _span(recorder, "decode", tokens=scfg.max_new_tokens) as sp:
+        for i in range(scfg.max_new_tokens):
+            gen.append(tok)
+            key, sub = jax.random.split(key)
+            tok, state = step(params, state, tok, jnp.int32(p + i), sub,
+                              jnp.float32(scfg.temperature))
+            kv = kv_step(kv, jnp.int32(p + i))
+        sp["sync"] = (tok, kv.fab.page_busy)
     tokens = jnp.concatenate(out + gen, axis=1)
-    return tokens.reshape((c, b, -1)), store_ledger(kv)
+    led = store_ledger(kv)
+    if recorder is not None:
+        led["trace_spans"] = recorder.events
+    if kv.seqs.tel is not None:
+        led["_tel"] = kv.seqs.tel
+    return tokens.reshape((c, b, -1)), led

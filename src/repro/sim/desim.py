@@ -64,7 +64,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bandwidth, compute_plane, fabric, residency
+from repro.core import (bandwidth, compute_plane, fabric, residency,
+                        telemetry)
 from repro.core.engine import (EngineState, gate_tree as _gate_tree,
                                init_engine_state, find, retire_arrivals,
                                schedule_line, schedule_page,
@@ -123,11 +124,25 @@ class SimState(NamedTuple):
     mem: fabric.FabricState      # remote-memory bus channel bank
     nic: fabric.FabricState      # compute-side NIC bank (C units)
     stats: dict
+    # telemetry plane (DESIGN.md §10): None below level="counters" — a
+    # leafless pytree, so the off path compiles to the same program as
+    # before the telemetry plane existed (bit-identity is structural)
+    tel: telemetry.TelemetryState = None
 
 
 STAT_KEYS = ("i", "n", "hits", "lat_sum", "pages_moved", "lines_moved",
              "net_bytes", "wb_bytes", "served_line", "served_page",
              "page_drops", "dirty_evicts", "evictions")
+
+# per-request series channels the telemetry ring samples (at the touched
+# module / requesting unit, plus the running stats ratios)
+SERIES_CHANNELS = ("page_backlog_ns", "ratio", "hit_rate", "evictions",
+                   "wb_bytes", "health")
+
+# `telemetry=None` normalizes to this STATIC off config, so the
+# telemetry-off lattice and the pre-telemetry call sites share one jit
+# cache entry (the compile-count pins rely on this)
+_TEL_OFF = telemetry.TelemetryConfig()
 
 
 def _net_link(net) -> fabric.LinkModel:
@@ -138,7 +153,8 @@ def _net_link(net) -> fabric.LinkModel:
                             health=jnp.asarray(net["sched_health"], F32))
 
 
-def _init_state(cfg: SimConfig, n_pages: int, net, ratio0) -> SimState:
+def _init_state(cfg: SimConfig, n_pages: int, net, ratio0,
+                telcfg: telemetry.TelemetryConfig = None) -> SimState:
     sets = residency.geometry(n_pages, cfg.local_frac, WAYS)
     c = cfg.num_cu
     fcfg = cfg.fabric_config()
@@ -158,11 +174,13 @@ def _init_state(cfg: SimConfig, n_pages: int, net, ratio0) -> SimState:
         nic=compute_plane.init_nic_bank(
             c, link=compute_plane.nic_link_for(net_link, c), ratio=ratio0),
         stats={k: jnp.zeros((), F32) for k in STAT_KEYS},
+        tel=telemetry.init_state(telcfg, len(SERIES_CHANNELS)),
     )
 
 
 def make_step(flags, cfg: SimConfig, net, comp_ratio, warm_after,
-              active_cu=1, policy=None):
+              active_cu=1, policy=None,
+              telcfg: telemetry.TelemetryConfig = None):
     """Per-request transition. `flags` may be a SchemeFlags (converted) or
     a TraceableFlags pytree — possibly traced, so every scheme switch
     below is `where`-gated and one compiled step serves any scheme. `net`
@@ -357,33 +375,52 @@ def make_step(flags, cfg: SimConfig, net, comp_ratio, warm_after,
             "evictions": stt["evictions"] + (do_insert & (evict_page >= 0)),
         }
 
+        # ---- telemetry plane (static level axis; None-transparent) ----
+        tel = st.tel
+        if telcfg is not None and telcfg.enabled:
+            # warm-gated end-to-end access latency (hit OR miss) — the
+            # same population `lat_sum`/`n` average, as a distribution
+            tel = telemetry.record_latency(tel, telcfg, done - t_issue,
+                                           gate=warm)
+            tel = telemetry.record_series(
+                tel, telcfg, stt["i"].astype(jnp.int32),
+                jnp.stack([
+                    fabric.backlog(net_fab, mc, t_issue)[1],
+                    ratio,
+                    stats["hits"] / jnp.maximum(stats["n"], 1.0),
+                    stats["evictions"],
+                    stats["wb_bytes"],
+                    jnp.mean(fabric.module_health(net_fab.link, t_issue)),
+                ]))
+
         new_st = SimState(
             t=st.t.at[cu].set(t_issue),
             ring=st.ring.at[cu, slot].set(done),
             res=compute_plane.unit_update(st.res, cu, res_u),
             eng=compute_plane.unit_update(st.eng, cu, eng),
             net=net_fab, mem=mem_fab, nic=nic_fab,
-            stats=stats,
+            stats=stats, tel=tel,
         )
         return new_st, done
 
     return step
 
 
-def _simulate_point(cfg, n_pages, flags, warm_after, trace_arrays, net,
-                    comp_ratio, active_cu, policy):
+def _simulate_point(cfg, n_pages, telcfg, flags, warm_after, trace_arrays,
+                    net, comp_ratio, active_cu, policy):
     """One (scheme, net, active-C, policy) lattice point on pure arrays —
     the vmap kernel. `active_cu` is traced (<= cfg.num_cu envelope);
-    `policy` is a traced residency.PolicyFlags pytree."""
+    `policy` is a traced residency.PolicyFlags pytree; `telcfg` is
+    STATIC (the telemetry level axis)."""
     ratio0 = as_traceable(flags).bw_ratio
-    st = _init_state(cfg, n_pages, net, ratio0)
+    st = _init_state(cfg, n_pages, net, ratio0, telcfg)
     step = make_step(flags, cfg, net, comp_ratio, warm_after, active_cu,
-                     policy)
+                     policy, telcfg)
     final, _ = jax.lax.scan(step, st, trace_arrays)
     total_time = jnp.maximum(jnp.max(final.ring), jnp.max(final.t))
     s = final.stats
     misses = jnp.maximum(s["n"] - s["hits"], 1.0)
-    return {
+    out = {
         "total_time_ns": total_time,
         "avg_miss_ns": s["lat_sum"] / misses,
         "avg_access_ns": s["lat_sum"] / jnp.maximum(s["n"], 1.0),
@@ -395,15 +432,25 @@ def _simulate_point(cfg, n_pages, flags, warm_after, trace_arrays, net,
         "bw_util": s["net_bytes"] / jnp.maximum(
             total_time * net["bw"][0], 1e-6),
     }
+    if telcfg is not None and telcfg.histogram_on:
+        # in-lattice tail read: the warm-gated access-latency histogram
+        # carried through the scan, one CDF walk per cell (under vmap)
+        p50, p95, p99 = telemetry.approx_percentiles(
+            final.tel.hist, final.tel.edges, [0.5, 0.95, 0.99])
+        out["p50_access_ns"] = p50
+        out["p95_access_ns"] = p95
+        out["p99_access_ns"] = p99
+    return out
 
 
-@partial(jax.jit, static_argnums=(0, 1))
-def _lattice_jit(cfg, n_pages, tflags, warm_after, trace_arrays, nets,
-                 comp_ratio, active_cus, policies):
+@partial(jax.jit, static_argnums=(0, 1, 2))
+def _lattice_jit(cfg, n_pages, telcfg, tflags, warm_after, trace_arrays,
+                 nets, comp_ratio, active_cus, policies):
     """vmap(schemes) o vmap(nets) o vmap(active-C) o vmap(policies) over
     `_simulate_point`, jitted once per (SimConfig, footprint, trace
-    shape, schedule knot count, C-sweep length, policy count)."""
-    point = partial(_simulate_point, cfg, n_pages)
+    shape, schedule knot count, C-sweep length, policy count,
+    TelemetryConfig)."""
+    point = partial(_simulate_point, cfg, n_pages, telcfg)
     over_pols = jax.vmap(point, in_axes=(None, None, None, None, None,
                                          None, 0))
     over_cus = jax.vmap(over_pols, in_axes=(None, None, None, None, None,
@@ -423,7 +470,8 @@ def lattice_cache_size() -> int:
 
 def simulate_lattice(schemes, cfg: SimConfig, trace: Trace, nets,
                      comp_ratio, warm_frac: float = 0.3,
-                     active_cus=None, policies=None):
+                     active_cus=None, policies=None,
+                     telemetry_cfg: telemetry.TelemetryConfig = None):
     """Every scheme x every net (x every compute-unit count x every
     replacement policy) over one trace in ONE compiled program.
 
@@ -444,6 +492,11 @@ def simulate_lattice(schemes, cfg: SimConfig, trace: Trace, nets,
     scoring and hit-refresh are `where`-selected), so an LRU / FIFO /
     RRIP / dirty-averse sweep rides the same compiled program too. None
     (default) runs the single `SimConfig.fifo`-aliased policy squeezed.
+    telemetry_cfg: optional STATIC `telemetry.TelemetryConfig` — at
+    level "histogram"+ every cell's metrics gain warm-gated
+    `p50/p95/p99_access_ns` read from the in-lattice latency histogram
+    (DESIGN.md §10). None == level "off": bit-identical outputs and the
+    SAME jit cache entry as a pre-telemetry call (compile-count pinned).
 
     Result nesting: [scheme][net] -> metrics dict of floats, with a [c]
     level appended when `active_cus` is given and a [policy] level
@@ -471,9 +524,10 @@ def simulate_lattice(schemes, cfg: SimConfig, trace: Trace, nets,
     stacked = {k: jnp.stack([jnp.asarray(n[k], F32) for n in nets])
                for k in nets[0]}
     cr = jnp.broadcast_to(jnp.asarray(comp_ratio, F32), (len(schemes),))
+    telcfg = _TEL_OFF if telemetry_cfg is None else telemetry_cfg
     # warm_after computed in python float64 (f32(warm_frac) * r can round
     # up past the integer boundary and drop the boundary request)
-    res = _lattice_jit(cfg, trace.n_pages, stack_flags(schemes),
+    res = _lattice_jit(cfg, trace.n_pages, telcfg, stack_flags(schemes),
                        jnp.asarray(warm_frac * r, F32), arrays, stacked,
                        cr, jnp.asarray(cus, jnp.int32),
                        residency.stack_policies(pols))
@@ -497,20 +551,25 @@ def simulate_lattice(schemes, cfg: SimConfig, trace: Trace, nets,
 
 def run_trace(scheme_flags, cfg: SimConfig, trace: Trace, net,
               comp_ratio, warm_frac: float = 0.3,
-              active_cu: int = None, policy=None) -> SimState:
+              active_cu: int = None, policy=None,
+              telemetry_cfg: telemetry.TelemetryConfig = None
+              ) -> SimState:
     """Replay one trace under one scheme/net and return the final
     SimState — the state-level sibling of `simulate_grid`, for callers
     that need the movement internals (residency tier, fabric channel
     banks, NIC banks, link model, adapted ratios, per-module/per-unit
     byte ledgers, engine buffers) rather than the metrics dict.
     `active_cu` defaults to the full `cfg.num_cu` envelope; `policy`
-    (PolicySpec / PolicyFlags / name) to the `SimConfig.fifo` alias."""
+    (PolicySpec / PolicyFlags / name) to the `SimConfig.fifo` alias;
+    `telemetry_cfg` (STATIC) turns on the telemetry plane — the final
+    state's `.tel` then carries the latency histogram and the sampled
+    series ring (`SERIES_CHANNELS`) for `repro.runtime.obs` to export."""
     r = len(trace.page)
     ratio0 = as_traceable(scheme_flags).bw_ratio
-    st = _init_state(cfg, trace.n_pages, net, ratio0)
+    st = _init_state(cfg, trace.n_pages, net, ratio0, telemetry_cfg)
     step = make_step(scheme_flags, cfg, net, comp_ratio, warm_frac * r,
                      cfg.num_cu if active_cu is None else active_cu,
-                     policy)
+                     policy, telemetry_cfg)
     xs = (jnp.asarray(trace.page), jnp.asarray(trace.off),
           jnp.asarray(trace.gap), jnp.asarray(trace.wr))
     final, _ = jax.lax.scan(step, st, xs)

@@ -249,3 +249,24 @@ def test_serve_batch_greedy_deterministic():
     np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
     assert out1.shape == (1, 10)
     assert int(out1.max()) < cfg.vocab_size
+
+
+def test_serve_zero_length_prompts():
+    """(B, 0) prompts skip prefill and decode from token 0 — this used
+    to crash with an unbound first token in every serve loop."""
+    from repro.core.daemon_store import KVStoreConfig
+    from repro.models.model import init_model
+    from repro.runtime.serve_loop import (ServeConfig, serve_batch,
+                                          serve_batch_paged)
+    cfg = get_config("qwen3-1.7b").reduced()
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    prompts = jnp.zeros((2, 0), jnp.int32)
+    out = serve_batch(params, cfg, prompts, ServeConfig(max_new_tokens=3))
+    assert out.shape == (2, 3)
+    store_cfg = KVStoreConfig(num_local_pages=4, page_tokens=8,
+                              kv_heads=2, head_dim=16)
+    out2, led = serve_batch_paged(params, cfg, prompts,
+                                  ServeConfig(max_new_tokens=3),
+                                  store_cfg)
+    assert out2.shape == (2, 3)
+    assert led["requests"] > 0

@@ -1,0 +1,262 @@
+"""Telemetry plane: percentile estimator vs numpy oracle, series ring,
+off-level bit-identity + compile-count pins on both planes, Perfetto
+export format, nested BENCH schema walker (DESIGN.md §10)."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # optional-hypothesis shim
+
+from repro.core import residency, telemetry
+from repro.core.daemon_store import (KVStoreConfig, init_kv_store_batch,
+                                     ledger, step_fetch_batch)
+from repro.core.fabric import FabricConfig
+from repro.core.params import NetworkParams
+from repro.runtime import obs
+from repro.sim import desim
+from repro.sim.desim import SimConfig, make_net, simulate_lattice
+from repro.sim.schemes import SCHEMES
+from repro.sim.trace import generate_trace
+from repro.sim.workloads import WORKLOADS
+
+HIST = telemetry.TelemetryConfig(level="histogram", bins=48,
+                                 lat_lo=1.0, lat_hi=1e6)
+
+
+def _state_with(samples, cfg=HIST):
+    tel = telemetry.init_state(cfg, 1)
+    return telemetry.record_latency(tel, cfg, jnp.asarray(samples))
+
+
+# ------------------------------------------------- percentile estimator
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(min_value=1.0, max_value=1e6,
+                          allow_nan=False, allow_infinity=False),
+                min_size=1, max_size=200),
+       st.sampled_from([0.5, 0.9, 0.95, 0.99]))
+def test_percentiles_match_numpy_oracle(samples, q):
+    """The CDF-walk estimator selects the bin holding numpy's
+    `inverted_cdf` percentile — the reported geometric midpoint is
+    within one (log-spaced) bin width of the exact answer."""
+    tel = _state_with(samples)
+    (est,) = telemetry.percentiles_from_state(tel, [q])
+    exact = float(np.percentile(np.asarray(samples), q * 100,
+                                method="inverted_cdf"))
+    width = (HIST.lat_hi / HIST.lat_lo) ** (1.0 / HIST.bins)
+    # f32 binning of a sample sitting exactly on an edge may shift it
+    # one bin; allow the neighbouring bin's midpoint too (2 widths)
+    assert est / exact < width ** 2 * 1.01
+    assert exact / est < width ** 2 * 1.01
+
+
+def test_percentiles_ordered_and_batched():
+    rng = np.random.default_rng(0)
+    samples = rng.lognormal(5.0, 2.0, 500).clip(1.0, 1e6)
+    tel = _state_with(samples)
+    p50, p95, p99 = telemetry.percentiles_from_state(tel, [0.5, 0.95,
+                                                           0.99])
+    assert 0 < p50 <= p95 <= p99
+    # a leading batch axis sums to the same aggregate distribution
+    half = _state_with(samples[:250]), _state_with(samples[250:])
+    batched = half[0]._replace(
+        hist=jnp.stack([half[0].hist, half[1].hist]))
+    assert telemetry.percentiles_from_state(batched, [0.5, 0.95, 0.99]) \
+        == [p50, p95, p99]
+    # traced reader agrees with the host reader
+    traced = telemetry.approx_percentiles(tel.hist, tel.edges,
+                                          [0.5, 0.95, 0.99])
+    np.testing.assert_allclose(np.asarray(traced), [p50, p95, p99],
+                               rtol=1e-5)
+
+
+def test_record_latency_gate_drops():
+    cfg = HIST
+    tel = telemetry.init_state(cfg, 1)
+    v = jnp.asarray([10.0, 100.0, 1000.0])
+    tel = telemetry.record_latency(tel, cfg, v,
+                                   gate=jnp.asarray([True, False, True]))
+    assert float(jnp.sum(tel.hist)) == 2.0
+    # warm-delta: subtracting a snapshot removes its samples
+    base = _state_with([10.0])
+    tel2 = telemetry.record_latency(base, cfg, jnp.asarray([1e5]))
+    (p50,) = telemetry.percentiles_from_state(tel2, [0.5], base=base)
+    assert p50 > 1e4
+
+
+# ----------------------------------------------------------- series ring
+def test_series_ring_stride_and_wrap():
+    cfg = telemetry.TelemetryConfig(level="counters", series_cap=4,
+                                    series_every=2)
+    tel = telemetry.init_state(cfg, 2)
+    for step in range(20):
+        tel = telemetry.record_series(tel, cfg, step,
+                                      jnp.asarray([float(step), 1.0]))
+    steps, rows = telemetry.series_rows(tel, cfg)
+    # 10 on-grid samples (0,2,..,18), ring keeps the LAST cap=4
+    assert int(np.asarray(tel.series_n)) == 10
+    np.testing.assert_array_equal(steps, [12, 14, 16, 18])
+    np.testing.assert_allclose(rows[:, 0], [12.0, 14.0, 16.0, 18.0])
+
+
+def test_series_partial_fill_time_order():
+    cfg = telemetry.TelemetryConfig(level="counters", series_cap=8)
+    tel = telemetry.init_state(cfg, 1)
+    for step in range(3):
+        tel = telemetry.record_series(tel, cfg, step,
+                                      jnp.asarray([float(step)]))
+    steps, rows = telemetry.series_rows(tel, cfg)
+    np.testing.assert_array_equal(steps, [0, 1, 2])
+    assert rows.shape == (3, 1)
+
+
+# ------------------------------------------------------ desim: off == off
+def test_desim_off_bit_identity_and_compile_pins():
+    """telemetry_cfg=None and level="off" share ONE jit cache entry and
+    produce bit-identical metrics; level="histogram" costs exactly one
+    extra compile and leaves every shared metric bit-identical."""
+    w = WORKLOADS["pr"]
+    tr = generate_trace(w, 2000, seed=3)
+    nets = [make_net(NetworkParams(bw_factor=4.0))]
+    schemes = [SCHEMES["daemon"], SCHEMES["remote"]]
+
+    base = simulate_lattice(schemes, SimConfig(), tr, nets, w.comp_ratio)
+    n0 = desim.lattice_cache_size()
+    off = simulate_lattice(schemes, SimConfig(), tr, nets, w.comp_ratio,
+                           telemetry_cfg=telemetry.TelemetryConfig())
+    assert desim.lattice_cache_size() == n0, "off recompiled the lattice"
+    assert off == base                       # bit-identical, same keys
+
+    hist = simulate_lattice(
+        schemes, SimConfig(), tr, nets, w.comp_ratio,
+        telemetry_cfg=telemetry.TelemetryConfig(level="histogram"))
+    assert desim.lattice_cache_size() == n0 + 1
+    for i in range(len(schemes)):
+        cell, ref = hist[i][0], base[i][0]
+        assert set(cell) == set(ref) | {"p50_access_ns", "p95_access_ns",
+                                        "p99_access_ns"}
+        for k in ref:
+            assert cell[k] == ref[k], k      # shared metrics untouched
+        assert 0 < cell["p50_access_ns"] <= cell["p95_access_ns"] \
+            <= cell["p99_access_ns"]
+    # remote's tail is no better than daemon's on this workload
+    assert hist[1][0]["p99_access_ns"] >= hist[0][0]["p99_access_ns"]
+
+
+# ---------------------------------------------------------- store: plane
+def _store_cfg(level="off", impl="ref"):
+    tcfg = telemetry.TelemetryConfig(level=level, lat_lo=0.01,
+                                     lat_hi=1e4)
+    return KVStoreConfig(num_local_pages=4, page_tokens=8, kv_heads=2,
+                         head_dim=16, kernel_impl=impl, telemetry=tcfg,
+                         fabric=FabricConfig(num_modules=2))
+
+
+def _drive(cfg, steps=8, batch=3):
+    rng = np.random.default_rng(7)
+    remote = jnp.asarray(rng.standard_normal((32, 8, 2, 16)), jnp.float32)
+    state = init_kv_store_batch(cfg, batch)
+    for _ in range(steps):
+        need = jnp.asarray(rng.integers(0, 32, (batch, 2)), jnp.int32)
+        state, _, _, _ = step_fetch_batch(state, cfg, remote, remote,
+                                          need)
+    return state
+
+
+def test_store_off_ledger_identity_and_percentiles():
+    led_off = ledger(_drive(_store_cfg("off")))
+    led_hist = ledger(_drive(_store_cfg("histogram")))
+    extra = {"stall_p50_steps", "stall_p90_steps", "stall_p99_steps"}
+    assert set(led_hist) == set(led_off) | extra
+    for k in led_off:
+        assert led_hist[k] == led_off[k], k
+    assert 0 <= led_hist["stall_p50_steps"] \
+        <= led_hist["stall_p90_steps"] <= led_hist["stall_p99_steps"]
+
+
+def test_store_single_compile_with_telemetry():
+    """Telemetry at histogram level preserves the store's single-compile
+    property (one jit trace serves every step/policy), for both the
+    fused and the chain hot path — the instruments are traced data."""
+    for impl in ("ref", "chain"):
+        cfg = _store_cfg("histogram", impl)
+        remote = jnp.zeros((32, 8, 2, 16), jnp.float32)
+        fetch = jax.jit(lambda s, need, pol, _cfg=cfg: step_fetch_batch(
+            s, _cfg, remote, remote, need, policy=pol))
+        state = init_kv_store_batch(cfg, 3)
+        rng = np.random.default_rng(0)
+        for pol_name in ("lru", "fifo", "rrip"):
+            need = jnp.asarray(rng.integers(0, 32, (3, 2)), jnp.int32)
+            state, _, _, _ = fetch(state, need,
+                                   residency.as_policy(pol_name))
+        assert fetch._cache_size() == 1, impl
+
+
+# ------------------------------------------------------- Perfetto export
+def test_trace_export_chrome_format(tmp_path):
+    """`obs.trace_export` emits Chrome trace-event JSON Perfetto loads:
+    a `traceEvents` list of X/C/M/i events, X spans carrying ts+dur."""
+    rec = obs.SpanRecorder()
+    with rec.span("prefill", tokens=4) as sp:
+        sp["sync"] = jnp.ones(())
+    with rec.span("decode", tid=1) as sp:
+        sp["sync"] = jnp.ones(())
+    cfg = telemetry.TelemetryConfig(level="counters", series_cap=8)
+    tel = telemetry.init_state(cfg, 2)
+    for step in range(5):
+        tel = telemetry.record_series(tel, cfg, step,
+                                      jnp.asarray([float(step), 0.5]))
+    counters = obs.counter_events(tel, cfg, ("backlog", "ratio"))
+
+    path = tmp_path / "trace.json"
+    doc = obs.trace_export(path, spans=rec.events, counters=counters,
+                           metadata={"serve": 0})
+    assert doc["traceEvents"] and doc["displayTimeUnit"] == "ms"
+    assert json.loads(path.read_text()) == doc   # file round-trips
+    phs = {ev["ph"] for ev in doc["traceEvents"]}
+    assert phs <= {"X", "C", "M", "i"} and {"X", "C", "M"} <= phs
+    for ev in doc["traceEvents"]:
+        assert {"name", "ph", "pid", "ts"} <= set(ev)
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0.0
+        if ev["ph"] == "C":
+            # one counter track per channel label
+            assert len(ev["args"]) == 1
+            assert set(ev["args"]) <= {"backlog", "ratio"}
+    names = [e["name"] for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert names == ["prefill", "decode"]
+
+
+def test_summary_renders():
+    tel = _state_with([5.0, 50.0, 500.0])
+    tel = telemetry.record_series(tel, HIST, 0, jnp.asarray([1.0]))
+    text = obs.summary("store", tel, HIST, ("backlog",), unit="steps")
+    assert "p50" in text and "p99" in text and "store" in text
+    assert "backlog" in text
+
+
+# --------------------------------------------------- nested BENCH schema
+def test_bench_schema_nested_walker():
+    """The dotted-`*` nested schemas catch a stale key anywhere inside a
+    BENCH document, while missing sections (quick runs) stay legal."""
+    from benchmarks.validate import assert_bench_schema
+    ok = {"quick": True,
+          "desim": {"bc": {"constant": {"total_time_ns": {},
+                                        "adaptive_win": 1.0,
+                                        "avg_access_ns": {},
+                                        "p50_access_ns": {},
+                                        "p99_access_ns": {}}}},
+          "headline": {"desim_best_win": 1.0, "tail_vs_mean": 1.2}}
+    assert_bench_schema("BENCH_robust.json", ok)
+
+    stale = {"quick": True,
+             "desim": {"bc": {"constant": {"total_time_ns": {},
+                                           "p999_access_ns": {}}}}}
+    with pytest.raises(ValueError, match="p999_access_ns"):
+        assert_bench_schema("BENCH_robust.json", stale)
+    # row_lists + nested compose: stale store variant key caught too
+    stale2 = {"store": {"flap": {"variants": {"adaptive":
+                                              {"dead_column": 1}}}}}
+    with pytest.raises(ValueError, match="dead_column"):
+        assert_bench_schema("BENCH_robust.json", stale2)
