@@ -145,7 +145,7 @@ def _repl_lag(state, clock):
 
 
 def run_replicated_warmed(cfg, num_replicas, pages, offs, writes,
-                          n_remote, *, link=None) -> dict:
+                          n_remote, *, link=None, mesh=None) -> dict:
     """Drive a replicated DaemonKVStore (C replicas x B tenants, one
     shared memory-side fabric + per-replica NIC banks) over
     (steps, C, B, W) request streams on the same `_warmed_run` core as
@@ -156,6 +156,12 @@ def run_replicated_warmed(cfg, num_replicas, pages, offs, writes,
     metric): per timed step, how far the busiest channel's committed
     service — shared module banks OR per-replica NIC banks, writeback
     channels included — extends past the decode clock.
+
+    `mesh` (optional 1-axis ``("data",)`` device mesh) routes every step
+    through `repro.runtime.mesh_plane.step_replicated_sharded` instead of
+    the single-device vmap stepper: the replica axis lives on real
+    devices and the shared module bank is psum-merged each step (the
+    sharded-vs-vmap column of BENCH_scale.json's mesh section).
     """
     assert pages.shape[1] == num_replicas
     remote = jnp.zeros((n_remote, cfg.page_tokens, cfg.kv_heads,
@@ -163,12 +169,23 @@ def run_replicated_warmed(cfg, num_replicas, pages, offs, writes,
     state = init_kv_store_replicated(cfg, num_replicas, pages.shape[2],
                                      link=link)
 
-    def fetch(state, t):
-        state, *_ = _repl_fetch(cfg, state, remote,
-                                jnp.asarray(pages[t]),
-                                jnp.asarray(offs[t]),
-                                jnp.asarray(writes[t]))
-        return state
+    if mesh is None:
+        def fetch(state, t):
+            state, *_ = _repl_fetch(cfg, state, remote,
+                                    jnp.asarray(pages[t]),
+                                    jnp.asarray(offs[t]),
+                                    jnp.asarray(writes[t]))
+            return state
+    else:
+        from repro.runtime import mesh_plane
+        state = mesh_plane.shard_replicated_state(state, mesh)
+
+        def fetch(state, t):
+            state, *_ = mesh_plane.step_replicated_sharded(
+                state, cfg, mesh, remote, remote,
+                jnp.asarray(pages[t]), jnp.asarray(offs[t]),
+                jnp.asarray(writes[t]))
+            return state
 
     return _warmed_run(state, pages.shape[0], fetch=fetch, lag=_repl_lag,
                        track_lag=True)

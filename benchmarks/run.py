@@ -17,8 +17,32 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
 import time
 from pathlib import Path
+
+
+def _early_devices() -> int:
+    """Pre-parse --devices from argv BEFORE anything imports jax: the
+    forced-host-device flag only works if it's in XLA_FLAGS when the
+    backend initializes (same pattern as tests/_distributed_checks.py)."""
+    argv = sys.argv[1:]
+    for i, a in enumerate(argv):
+        if a == "--devices" and i + 1 < len(argv):
+            return int(argv[i + 1])
+        if a.startswith("--devices="):
+            return int(a.split("=", 1)[1])
+    return None
+
+
+_DEVICES = _early_devices()
+if _DEVICES and _DEVICES > 1 \
+        and "host_platform_device_count" not in os.environ.get(
+            "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={_DEVICES}").strip()
 
 import numpy as np
 
@@ -43,6 +67,10 @@ def main() -> None:
                     choices=("auto", "pallas", "ref", "chain"),
                     help="store hot-path impl for the serve sweep "
                          "(KVStoreConfig.kernel_impl)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="run the scale sweep's mesh section on N forced "
+                         "host devices (sets XLA_FLAGS before jax init; "
+                         "sharded-vs-vmap columns in BENCH_scale.json)")
     args = ap.parse_args()
     r = 20000 if args.quick else None
     only = set(filter(None, args.only.split(",")))
@@ -128,7 +156,8 @@ def main() -> None:
               f"(ratio {hl['tail_vs_mean']:.3f})")
     if want("scale"):
         sc = scaling.scale_sweep(quick=args.quick,
-                                 desim=f22["desim"] if f22 else None)
+                                 desim=f22["desim"] if f22 else None,
+                                 devices=args.devices)
         assert_bench_schema(BENCH_SCALE_JSON.name, sc)
         BENCH_SCALE_JSON.write_text(json.dumps(sc, indent=2) + "\n")
         hl = sc["headline"]

@@ -31,6 +31,9 @@ EXPERIMENTS.md §Scaling).
 """
 from __future__ import annotations
 
+import os
+import time
+
 import numpy as np
 
 from benchmarks.common import (SERVE_PAGES_PER_TENANT as PAGES_PER_TENANT,
@@ -167,10 +170,128 @@ def store_scaling(quick: bool = False, steps: int = None) -> dict:
     return out
 
 
-def scale_sweep(quick: bool = False, desim: dict = None) -> dict:
+# ------------------------------------------------------------- mesh plane
+def mesh_scaling(quick: bool = False, devices: int = None,
+                 r: int = None) -> dict:
+    """Sharded-vs-vmap wall-clock on both planes (DESIGN.md §11).
+
+    Runs the SAME quick lattice sweep (2 schemes x 4 nets x 2 policies =
+    8 cells) through `desim.simulate_lattice` (single-device vmap) and
+    `mesh_plane.simulate_lattice_sharded` (cells data-parallel over a
+    ("data",) mesh), and the SAME C=8 replicated-store stream through
+    `run_replicated_warmed` with and without the mesh. Both paths are
+    compiled+warmed before timing, so the columns are steady-state
+    wall-clock — under `XLA_FLAGS=--xla_force_host_platform_device_count`
+    the speedup reflects the host's actual core budget (1 on a
+    single-core container, ~devices on a real multi-core runner).
+    """
+    from repro.runtime import mesh_plane
+    import jax
+
+    avail = len(jax.devices())
+    d = min(devices or avail, avail)
+    mesh = mesh_plane.make_data_mesh(d)
+
+    # --- desim plane: nets x policies cells sharded across the mesh
+    # (its own shorter trace: the section measures RELATIVE wall-clock of
+    # the two execution paths, not absolute simulated time)
+    r = r or (8000 if quick else 20000)
+    tr = get_trace("pr", r)
+    w = WORKLOADS["pr"]
+    schemes = [SCHEMES[s] for s in ("remote", "daemon")]
+    nets = [make_net(NetworkParams(bw_factor=bf, switch_latency_ns=sw))
+            for sw, bf in ((100.0, 4.0), (100.0, 8.0),
+                           (400.0, 4.0), (400.0, 8.0))]
+    pols = ["lru", "fifo"]
+    cells = len(nets) * len(pols)
+
+    def timed(fn):
+        fn()                        # compile + warm
+        t0 = time.time()
+        fn()
+        return time.time() - t0
+
+    cfg = SimConfig()
+    vmap_s = timed(lambda: simulate_lattice(
+        schemes, cfg, tr, nets, w.comp_ratio, policies=pols))
+    sharded_s = timed(lambda: mesh_plane.simulate_lattice_sharded(
+        schemes, cfg, tr, nets, w.comp_ratio, mesh=mesh, policies=pols))
+
+    # --- store plane: C=8 replicas placed on the mesh (C must divide).
+    # The collective width is capped at 4: every sharded step psums at
+    # the fabric boundary, and XLA:CPU's in-process collectives need all
+    # participants resident at once — an 8-wide rendezvous on a
+    # low-core host thrashes (and can wedge) its thread pool. 4-wide
+    # still exercises multi-replica-per-shard placement (C_loc=2).
+    c = max(C_SWEEP)
+    d_cap = min(d, 4)
+    d_store = max(x for x in range(1, d_cap + 1) if c % x == 0)
+    store_mesh = mesh_plane.make_data_mesh(d_store)
+    # fewer steps than store_scaling: every sharded step pays a
+    # cross-device psum at the fabric boundary, which on forced host
+    # devices costs a thread rendezvous per step
+    steps = 40 if quick else 120
+    pages, offs, writes = _replica_streams(steps, c)
+    scfg = _store_cfg(True, MODULE_SWEEP[-1])
+    runs = {}
+    for label, m in (("vmap", None), ("sharded", store_mesh)):
+        run = run_replicated_warmed(scfg, c, pages, offs, writes,
+                                    c * BATCH * PAGES_PER_TENANT, mesh=m)
+        warm = run["warm"]
+        mean_lag = run["lag_sum"] / max(steps - warm, 1)
+        spw = run["wall_s"] / max(steps - warm, 1)
+        service_steps = (steps - warm) + mean_lag
+        runs[label] = {
+            "wall_s": run["wall_s"],
+            "tokens_per_s": (c * BATCH * (steps - warm)
+                             / (service_steps * spw)),
+        }
+
+    out = {
+        "devices": d,
+        # forced host devices time-slice the real cores: the speedup
+        # ceiling is min(devices, cells, host_cores), so record the
+        # core budget next to the numbers (EXPERIMENTS.md §Multi-device)
+        "host_cores": os.cpu_count(),
+        "cells": cells,
+        "desim": {"vmap_wall_s": vmap_s, "sharded_wall_s": sharded_s,
+                  "sharded_speedup": vmap_s / max(sharded_s, 1e-9)},
+        "store": {"c": c, "devices": d_store,
+                  "vmap_wall_s": runs["vmap"]["wall_s"],
+                  "sharded_wall_s": runs["sharded"]["wall_s"],
+                  "vmap_tokens_per_s": runs["vmap"]["tokens_per_s"],
+                  "sharded_tokens_per_s":
+                      runs["sharded"]["tokens_per_s"],
+                  "sharded_speedup": (runs["vmap"]["wall_s"]
+                                      / max(runs["sharded"]["wall_s"],
+                                            1e-9))},
+    }
+    out["headline"] = {
+        "desim_sharded_speedup": out["desim"]["sharded_speedup"],
+        "store_sharded_speedup": out["store"]["sharded_speedup"],
+    }
+    csv_print("scaling/mesh: sharded-vs-vmap wall-clock (DESIGN.md §11; "
+              f"{d} forced host devices, {cells} lattice cells)",
+              ["plane", "vmap_wall_s", "sharded_wall_s", "speedup"],
+              [["desim", round(vmap_s, 3), round(sharded_s, 3),
+                round(out["desim"]["sharded_speedup"], 2)],
+               ["store", round(runs["vmap"]["wall_s"], 3),
+                round(runs["sharded"]["wall_s"], 3),
+                round(out["store"]["sharded_speedup"], 2)]])
+    print(f"# mesh headline: sharded-vs-vmap on {d} devices "
+          f"({out['host_cores']} host cores): desim "
+          f"{out['headline']['desim_sharded_speedup']:.2f}x, store "
+          f"{out['headline']['store_sharded_speedup']:.2f}x")
+    return out
+
+
+def scale_sweep(quick: bool = False, desim: dict = None,
+                devices: int = None) -> dict:
     """`desim` accepts a precomputed `desim_scaling` result (e.g. from a
     `fig22` figure run in the same invocation) so the lattice is priced
-    once per benchmarks.run call."""
+    once per benchmarks.run call. `devices` (the `--devices N` flag)
+    additionally runs `mesh_scaling` and records its sharded-vs-vmap
+    columns under the "mesh" key."""
     desim = desim if desim is not None else desim_scaling(quick=quick)
     store = store_scaling(quick=quick)
     c1, cmax = str(C_SWEEP[0]), str(C_SWEEP[-1])
@@ -191,7 +312,10 @@ def scale_sweep(quick: bool = False, desim: dict = None) -> dict:
     print(f"# scaling headline: store tokens/s C={cmax} vs C={c1}: "
           f"daemon {daemon_up:.2f}x, remote {remote_up:.2f}x "
           f"(gap {headline['scaling_gap']:.2f}x)")
-    return {"quick": quick, "c_sweep": list(C_SWEEP),
-            "module_sweep": list(MODULE_SWEEP),
-            "batch_per_replica": BATCH,
-            "desim": desim, "store": store, "headline": headline}
+    out = {"quick": quick, "c_sweep": list(C_SWEEP),
+           "module_sweep": list(MODULE_SWEEP),
+           "batch_per_replica": BATCH,
+           "desim": desim, "store": store, "headline": headline}
+    if devices is not None:
+        out["mesh"] = mesh_scaling(quick=quick, devices=devices)
+    return out

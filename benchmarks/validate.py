@@ -93,7 +93,7 @@ BENCH_SCHEMAS = {
     },
     "BENCH_scale.json": {
         "top": {"quick", "c_sweep", "module_sweep", "batch_per_replica",
-                "desim", "store", "headline"},
+                "desim", "store", "headline", "mesh"},
         "nested": {
             "desim.*.*.*": {"total_time_ns", "speedup_vs_c1"},
             "store.*.*.*": {"tokens_per_s", "service_steps",
@@ -102,6 +102,17 @@ BENCH_SCHEMAS = {
                             "module_bytes"},
             "headline": {"daemon_speedup_c_max", "remote_speedup_c_max",
                          "scaling_gap", "daemon_scales_remote_degrades"},
+            # mesh plane (DESIGN.md §11): sharded-vs-vmap wall-clock,
+            # written only when benchmarks.run gets --devices N
+            "mesh": {"devices", "host_cores", "cells", "desim", "store",
+                     "headline"},
+            "mesh.desim": {"vmap_wall_s", "sharded_wall_s",
+                           "sharded_speedup"},
+            "mesh.store": {"c", "devices", "vmap_wall_s",
+                           "sharded_wall_s", "vmap_tokens_per_s",
+                           "sharded_tokens_per_s", "sharded_speedup"},
+            "mesh.headline": {"desim_sharded_speedup",
+                              "store_sharded_speedup"},
         },
     },
     "BENCH_capacity.json": {

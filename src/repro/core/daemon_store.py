@@ -850,7 +850,7 @@ def step_fetch_batch(state: BatchedKVStoreState, cfg: KVStoreConfig,
 def step_fetch_replicated(state: ReplicatedKVStoreState,
                           cfg: KVStoreConfig, remote_k, remote_v,
                           needed_pages, needed_offsets=None,
-                          needed_writes=None, policy=None):
+                          needed_writes=None, policy=None, active=None):
     """Serve one decode step for C replicas x B tenants:
     `needed_pages` (C, B, R) (replica-major, matching the state layout).
 
@@ -863,6 +863,12 @@ def step_fetch_replicated(state: ReplicatedKVStoreState,
     serialize on its own ingress, arrival = the later completion). With
     C == 1 the NIC leg is gated off and this is `step_fetch_batch`.
 
+    `active` overrides the NIC gate (default: C > 1 from the local
+    shape). The mesh plane (`runtime/mesh_plane.py`) passes the GLOBAL
+    replica count's gate when each device steps a local slice whose own
+    C may be 1 — the gate must reflect the whole deployment, not the
+    shard.
+
     Returns (state, k (C,B,R,page,KV,D), v, served_local (C,B,R) bool).
     """
     c, b, r = needed_pages.shape
@@ -874,7 +880,7 @@ def step_fetch_replicated(state: ReplicatedKVStoreState,
                              else jnp.asarray(needed_writes).reshape(
                                  (c * b, r)))
     cus = jnp.arange(c * b, dtype=jnp.int32) // b    # owning replica
-    active = c > 1
+    active = (c > 1) if active is None else active
     pol = _policy_or_cfg(cfg, policy)
     clock = state.clock + 1.0
     if cfg.kernel_impl == "chain":

@@ -36,6 +36,7 @@ from dataclasses import dataclass
 from typing import NamedTuple, Tuple
 
 import jax.numpy as jnp
+from jax import lax
 
 from repro.core import bandwidth
 
@@ -237,6 +238,39 @@ def total_bytes(fab: FabricState) -> jnp.ndarray:
     """Total wire bytes across every module and channel."""
     return (jnp.sum(fab.line_bytes) + jnp.sum(fab.page_bytes)
             + jnp.sum(fab.wb_bytes))
+
+
+# The FabricState leaves that are *accumulated state* of the shared
+# memory modules (channel clocks + byte ledgers + controller state) —
+# everything except the link model, which is read-only input.
+_SHARED_FIELDS = ("line_busy", "page_busy", "wb_busy",
+                  "line_bytes", "page_bytes", "wb_bytes",
+                  "ratio", "line_rate", "page_rate")
+
+
+def reduce_deltas(base: FabricState, local: FabricState,
+                  axis_name: str) -> FabricState:
+    """Merge per-device views of the SHARED module channel bank.
+
+    Inside `shard_map`, every device steps its own copy of the shared
+    ``FabricState`` from a common ``base`` snapshot. This is the fabric
+    boundary where the disaggregated views rejoin: each device
+    contributed ``local - base`` (busy-time it enqueued, bytes it moved,
+    controller drift), and the merged bank is ``base + psum(delta)``
+    over `axis_name`. Byte ledgers are additive by construction, so
+    two-endpoint byte conservation stays EXACT; busy-time deltas sum as
+    if the devices' service demands were serialized onto the channel,
+    which upper-bounds each device's own view (contention across devices
+    lands at this boundary rather than per-request). On a 1-device mesh
+    the psum is the identity and the result is bit-identical to `local`.
+    The link model is read-only input, never reduced.
+    """
+    merged = {
+        f: getattr(base, f) + lax.psum(
+            getattr(local, f) - getattr(base, f), axis_name)
+        for f in _SHARED_FIELDS
+    }
+    return local._replace(**merged)
 
 
 # ------------------------------------------------- adaptive repartitioning

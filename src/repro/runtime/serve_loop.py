@@ -274,7 +274,8 @@ def serve_batch_paged(params, cfg: ArchConfig, prompts, scfg: ServeConfig,
 def serve_replicated(params, cfg: ArchConfig, prompts, scfg: ServeConfig,
                      store_cfg: KVStoreConfig, num_replicas: int,
                      pcfg: PagedServeConfig = PagedServeConfig(),
-                     opt: ModelOptions = None, link=None, recorder=None):
+                     opt: ModelOptions = None, link=None, recorder=None,
+                     mesh=None):
     """Replicated serving: C serving replicas x B tenants each, one
     shared memory-side fabric (the compute plane, DESIGN.md §7).
 
@@ -286,6 +287,13 @@ def serve_replicated(params, cfg: ArchConfig, prompts, scfg: ServeConfig,
     bank — the multi-client-contention workload of a real disaggregated
     rack. Each of the C*B tenants owns a distinct region of one shared
     remote KV pool.
+
+    `mesh` (optional 1-axis ``("data",)`` device mesh, see
+    `repro.runtime.mesh_plane` / DESIGN.md §11) places the replica axis
+    on real devices: per-replica state and NICs device-local, the shared
+    module bank psum-merged at the fabric boundary each step. C must
+    divide evenly across the mesh; a 1-device mesh is bit-identical to
+    the default vmap path.
 
     Returns (tokens (C, B, P + max_new_tokens), ledger dict — including
     per-module `module_bytes` and per-replica `unit_bytes`).
@@ -308,17 +316,34 @@ def serve_replicated(params, cfg: ArchConfig, prompts, scfg: ServeConfig,
     remote_v = jnp.zeros(rshape, jnp.bfloat16)
     seq_ids = jnp.arange(c * b, dtype=jnp.int32)
 
+    if mesh is not None:
+        from repro.runtime import mesh_plane
+        kv = mesh_plane.shard_replicated_state(kv, mesh)
+
     @jax.jit
-    def kv_step(kv_state, pos):
+    def request_window(pos):
         need, offs, writes = paged_request_window(
             jnp.full((c * b,), pos, jnp.int32), seq_ids,
             store_cfg.page_tokens, pcfg.window_pages, pcfg.pages_per_seq)
         shape = (c, b, pcfg.window_pages)
+        return (need.reshape(shape), offs.reshape(shape),
+                writes.reshape(shape))
+
+    @jax.jit
+    def kv_step_vmap(kv_state, pos):
+        need, offs, writes = request_window(pos)
         kv_state, _, _, _ = step_fetch_replicated(
-            kv_state, store_cfg, remote_k, remote_v,
-            need.reshape(shape), offs.reshape(shape),
-            writes.reshape(shape))
+            kv_state, store_cfg, remote_k, remote_v, need, offs, writes)
         return kv_state
+
+    def kv_step_sharded(kv_state, pos):
+        need, offs, writes = request_window(pos)
+        kv_state, _, _, _ = mesh_plane.step_replicated_sharded(
+            kv_state, store_cfg, mesh, remote_k, remote_v, need, offs,
+            writes)
+        return kv_state
+
+    kv_step = kv_step_vmap if mesh is None else kv_step_sharded
 
     out = [flat_prompts]
     # zero-length prompts skip prefill and decode from a BOS-like token 0

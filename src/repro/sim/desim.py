@@ -468,6 +468,65 @@ def lattice_cache_size() -> int:
     return _lattice_jit._cache_size()
 
 
+def _lattice_inputs(schemes, cfg, trace, nets, comp_ratio, warm_frac,
+                    active_cus, policies, telemetry_cfg):
+    """Validate + array-ify one lattice sweep's inputs.
+
+    Shared by `simulate_lattice` (single-device vmap) and
+    `repro.runtime.mesh_plane.simulate_lattice_sharded` (shard_map over
+    the nets x policies product) so both paths trace the SAME
+    `_simulate_point` on bit-identical operands. Returns
+    (tflags, warm_after, arrays, stacked_nets, cr, cus_arr, pols_arr,
+    telcfg, squeeze_cu, squeeze_pol, n_cus, n_pols)."""
+    schemes = list(schemes)
+    if not schemes:
+        raise ValueError("simulate_lattice needs at least one scheme")
+    squeeze_cu = active_cus is None
+    cus = [cfg.num_cu] if squeeze_cu else list(active_cus)
+    if not cus or any(c < 1 or c > cfg.num_cu for c in cus):
+        raise ValueError(f"active_cus must be a non-empty sequence "
+                         f"within [1, num_cu={cfg.num_cu}], got {cus}")
+    squeeze_pol = policies is None
+    pols = [cfg.default_policy()] if squeeze_pol else list(policies)
+    if not pols:
+        raise ValueError("simulate_lattice needs at least one policy")
+    r = len(trace.page)
+    arrays = (jnp.asarray(trace.page), jnp.asarray(trace.off),
+              jnp.asarray(trace.gap), jnp.asarray(trace.wr))
+    stacked = {k: jnp.stack([jnp.asarray(n[k], F32) for n in nets])
+               for k in nets[0]}
+    cr = jnp.broadcast_to(jnp.asarray(comp_ratio, F32), (len(schemes),))
+    telcfg = _TEL_OFF if telemetry_cfg is None else telemetry_cfg
+    # warm_after computed in python float64 (f32(warm_frac) * r can round
+    # up past the integer boundary and drop the boundary request)
+    return (stack_flags(schemes), jnp.asarray(warm_frac * r, F32),
+            arrays, stacked, cr, jnp.asarray(cus, jnp.int32),
+            residency.stack_policies(pols), telcfg,
+            squeeze_cu, squeeze_pol, len(cus), len(pols))
+
+
+def _nest_lattice(res, n_schemes, n_nets, n_cus, n_pols,
+                  squeeze_cu, squeeze_pol):
+    """(S, N, C, P)-leaved metrics dict -> the documented python nesting:
+    [scheme][net] -> dict, with [c] / [policy] levels appended when their
+    axes were requested (squeezed single-entry axes collapse away)."""
+    def cell(i, j, c, p):
+        return {k: float(v[i, j, c, p]) for k, v in res.items()}
+
+    def nest(i, j):
+        if squeeze_cu and squeeze_pol:
+            return cell(i, j, 0, 0)
+        if squeeze_pol:
+            return [cell(i, j, c, 0) for c in range(n_cus)]
+        if squeeze_cu:
+            return [cell(i, j, 0, p) for p in range(n_pols)]
+        return [[cell(i, j, c, p) for p in range(n_pols)]
+                for c in range(n_cus)]
+
+    return [[nest(i, j) for j in range(n_nets)]
+            for i in range(n_schemes)]
+
+
 def simulate_lattice(schemes, cfg: SimConfig, trace: Trace, nets,
                      comp_ratio, warm_frac: float = 0.3,
                      active_cus=None, policies=None,
@@ -506,47 +565,15 @@ def simulate_lattice(schemes, cfg: SimConfig, trace: Trace, nets,
     sweeps — more ratios, networks, profiles, unit counts, or policies —
     cost compile time once.
     """
-    schemes = list(schemes)
-    if not schemes:
-        raise ValueError("simulate_lattice needs at least one scheme")
-    squeeze_cu = active_cus is None
-    cus = [cfg.num_cu] if squeeze_cu else list(active_cus)
-    if not cus or any(c < 1 or c > cfg.num_cu for c in cus):
-        raise ValueError(f"active_cus must be a non-empty sequence "
-                         f"within [1, num_cu={cfg.num_cu}], got {cus}")
-    squeeze_pol = policies is None
-    pols = [cfg.default_policy()] if squeeze_pol else list(policies)
-    if not pols:
-        raise ValueError("simulate_lattice needs at least one policy")
-    r = len(trace.page)
-    arrays = (jnp.asarray(trace.page), jnp.asarray(trace.off),
-              jnp.asarray(trace.gap), jnp.asarray(trace.wr))
-    stacked = {k: jnp.stack([jnp.asarray(n[k], F32) for n in nets])
-               for k in nets[0]}
-    cr = jnp.broadcast_to(jnp.asarray(comp_ratio, F32), (len(schemes),))
-    telcfg = _TEL_OFF if telemetry_cfg is None else telemetry_cfg
-    # warm_after computed in python float64 (f32(warm_frac) * r can round
-    # up past the integer boundary and drop the boundary request)
-    res = _lattice_jit(cfg, trace.n_pages, telcfg, stack_flags(schemes),
-                       jnp.asarray(warm_frac * r, F32), arrays, stacked,
-                       cr, jnp.asarray(cus, jnp.int32),
-                       residency.stack_policies(pols))
-
-    def cell(i, j, c, p):
-        return {k: float(v[i, j, c, p]) for k, v in res.items()}
-
-    def nest(i, j):
-        if squeeze_cu and squeeze_pol:
-            return cell(i, j, 0, 0)
-        if squeeze_pol:
-            return [cell(i, j, c, 0) for c in range(len(cus))]
-        if squeeze_cu:
-            return [cell(i, j, 0, p) for p in range(len(pols))]
-        return [[cell(i, j, c, p) for p in range(len(pols))]
-                for c in range(len(cus))]
-
-    return [[nest(i, j) for j in range(len(nets))]
-            for i in range(len(schemes))]
+    schemes = list(schemes)      # may be a generator: list ONCE
+    (tflags, warm_after, arrays, stacked, cr, cus_arr, pols_arr, telcfg,
+     squeeze_cu, squeeze_pol, n_cus, n_pols) = _lattice_inputs(
+        schemes, cfg, trace, nets, comp_ratio, warm_frac, active_cus,
+        policies, telemetry_cfg)
+    res = _lattice_jit(cfg, trace.n_pages, telcfg, tflags, warm_after,
+                       arrays, stacked, cr, cus_arr, pols_arr)
+    return _nest_lattice(res, len(schemes), len(nets), n_cus,
+                         n_pols, squeeze_cu, squeeze_pol)
 
 
 def run_trace(scheme_flags, cfg: SimConfig, trace: Trace, net,

@@ -21,6 +21,6 @@ def _run(which: str):
 
 
 @pytest.mark.parametrize("which", ["moe", "compress", "pipeline",
-                                   "sharded"])
+                                   "sharded", "mesh"])
 def test_distributed(which):
     _run(which)

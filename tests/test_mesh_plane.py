@@ -1,0 +1,268 @@
+"""Mesh plane (DESIGN.md §11) on ONE device: the sharded paths must fall
+back bit-identically to the vmap paths — `simulate_lattice_sharded` to
+`simulate_lattice` (and transitively to the seed golden capture) and
+`step_replicated_sharded` to `step_fetch_replicated` (a 1-device psum is
+the identity) — plus compile-count pins, the cross-device fabric
+reduction's conservation/identity algebra, and the generalized
+`launch/mesh.py` constructors. The REAL multi-device equivalence runs in
+`tests/test_distributed.py::test_distributed[mesh]` (subprocess with 8
+forced host devices; this process must keep seeing 1 device)."""
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fabric
+from repro.core.daemon_store import (KVStoreConfig,
+                                     init_kv_store_replicated, ledger,
+                                     step_fetch_replicated)
+from repro.core.params import NetworkParams
+from repro.launch.mesh import (build_mesh, make_data_mesh,
+                               make_production_mesh, make_test_mesh)
+from repro.runtime import mesh_plane
+from repro.sim.desim import SimConfig, make_net, simulate_lattice
+from repro.sim.schemes import SCHEMES
+from repro.sim.trace import generate_trace
+from repro.sim.workloads import WORKLOADS
+
+GOLDEN = Path(__file__).parent / "golden" / "seed_movement_golden.json"
+
+
+def _eq(a, b):
+    return a == b or (np.isnan(a) and np.isnan(b))
+
+
+def _nets(pairs):
+    return [make_net(NetworkParams(bw_factor=bf, switch_latency_ns=sw))
+            for sw, bf in pairs]
+
+
+@pytest.fixture(scope="module")
+def mesh1():
+    return make_data_mesh(1)
+
+
+@pytest.fixture(scope="module")
+def lattice_inputs():
+    w = WORKLOADS["pr"]
+    tr = generate_trace(w, 500, seed=3)
+    nets = _nets([(100.0, 4.0), (400.0, 8.0), (200.0, 2.0)])
+    schemes = [SCHEMES[s] for s in ("remote", "daemon")]
+    return schemes, tr, nets, w.comp_ratio
+
+
+# ----------------------------------------------------- lattice bit-identity
+def test_sharded_lattice_matches_vmap_full_axes(mesh1, lattice_inputs):
+    """All four axes requested: every cell of the sharded result is
+    bitwise the vmap result (the 3x2 = 6 cells ride one shard)."""
+    schemes, tr, nets, cr = lattice_inputs
+    cfg = SimConfig(num_cu=2)
+    kw = dict(active_cus=[1, 2], policies=["lru", "fifo"])
+    ref = simulate_lattice(schemes, cfg, tr, nets, cr, **kw)
+    got = mesh_plane.simulate_lattice_sharded(schemes, cfg, tr, nets, cr,
+                                              mesh=mesh1, **kw)
+    for i in range(len(schemes)):
+        for j in range(len(nets)):
+            for c in range(2):
+                for p in range(2):
+                    for k, v in ref[i][j][c][p].items():
+                        assert _eq(v, got[i][j][c][p][k]), \
+                            (i, j, c, p, k, v, got[i][j][c][p][k])
+
+
+def test_sharded_lattice_matches_vmap_squeezed(mesh1, lattice_inputs):
+    """Default (squeezed) axes: same [scheme][net] -> dict nesting, same
+    bits."""
+    schemes, tr, nets, cr = lattice_inputs
+    ref = simulate_lattice(schemes, SimConfig(), tr, nets, cr)
+    got = mesh_plane.simulate_lattice_sharded(
+        schemes, SimConfig(), tr, nets, cr, mesh=mesh1)
+    for i in range(len(schemes)):
+        for j in range(len(nets)):
+            for k, v in ref[i][j].items():
+                assert _eq(v, got[i][j][k]), (i, j, k)
+
+
+def test_sharded_lattice_matches_seed_golden(mesh1):
+    """The sharded path reproduces the seed's per-scheme programs
+    directly (same golden capture `simulate_lattice` is pinned to)."""
+    golden = json.loads(GOLDEN.read_text())
+    rec = golden["workloads"]["pr"]
+    names = golden["schemes"]
+    tr = generate_trace(WORKLOADS["pr"], golden["r"], seed=rec["seed"])
+    nets = _nets(golden["net_pairs"])
+    res = mesh_plane.simulate_lattice_sharded(
+        [SCHEMES[s] for s in names], SimConfig(), tr, nets,
+        rec["comp_ratio"], mesh=mesh1)
+    for i, s in enumerate(names):
+        for j in range(len(nets)):
+            for key, new in res[i][j].items():
+                np.testing.assert_allclose(
+                    new, rec["schemes"][s][j][key], rtol=1e-5, atol=1e-6,
+                    err_msg=f"pr/{s}/net{j}/{key}")
+
+
+def test_sharded_lattice_single_compile(mesh1, lattice_inputs):
+    """More schemes/nets of the same shape reuse the compiled sharded
+    lattice — the same one-compile contract `_lattice_jit` has."""
+    schemes, tr, nets, cr = lattice_inputs
+    before = mesh_plane.sharded_lattice_cache_size()
+    mesh_plane.simulate_lattice_sharded(schemes, SimConfig(), tr, nets,
+                                        cr, mesh=mesh1)
+    mid = mesh_plane.sharded_lattice_cache_size()
+    more = [SCHEMES[s] for s in ("remote", "lc")]
+    mesh_plane.simulate_lattice_sharded(more, SimConfig(), tr,
+                                        list(reversed(nets)), cr,
+                                        mesh=mesh1)
+    after = mesh_plane.sharded_lattice_cache_size()
+    assert mid - before <= 1
+    assert after == mid, "same-shape sweep must reuse the compile"
+
+
+# ------------------------------------------------------ store bit-identity
+STORE_CFG = KVStoreConfig(num_local_pages=16, page_tokens=16, kv_heads=4,
+                          head_dim=64, page_budget_per_step=16)
+
+
+def _store_steps(c, b, r, n_remote, n=4, seed=0):
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for _ in range(n):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        out.append((jax.random.randint(k1, (c, b, r), 0, n_remote),
+                    jax.random.randint(k2, (c, b, r), 0,
+                                       STORE_CFG.page_tokens),
+                    jax.random.bernoulli(k3, 0.3, (c, b, r))))
+    return out
+
+
+def test_sharded_store_matches_vmap_on_one_device(mesh1):
+    """Multi-step sharded run == vmap run, state and outputs bitwise
+    (1-device psum is the identity), ledgers equal."""
+    c, b, r, n_remote = 4, 2, 3, 64
+    rshape = (n_remote, STORE_CFG.page_tokens, STORE_CFG.kv_heads,
+              STORE_CFG.head_dim)
+    rk = jnp.arange(float(np.prod(rshape))).reshape(rshape).astype(
+        jnp.bfloat16)
+    rv = (rk * 0.5).astype(jnp.bfloat16)
+    ref = init_kv_store_replicated(STORE_CFG, c, b)
+    st = mesh_plane.shard_replicated_state(
+        init_kv_store_replicated(STORE_CFG, c, b), mesh1)
+    for need, offs, wrs in _store_steps(c, b, r, n_remote):
+        ref, k1, v1, h1 = step_fetch_replicated(ref, STORE_CFG, rk, rv,
+                                                need, offs, wrs)
+        st, k2, v2, h2 = mesh_plane.step_replicated_sharded(
+            st, STORE_CFG, mesh1, rk, rv, need, offs, wrs)
+    for name in ref._fields:
+        eq = jax.tree.map(lambda x, y: bool(jnp.all(x == y)),
+                          getattr(ref, name), getattr(st, name))
+        assert all(jax.tree.leaves(eq)), f"state field {name} diverged"
+    assert jnp.array_equal(k1, k2) and jnp.array_equal(v1, v2)
+    assert jnp.array_equal(h1, h2)
+    assert ledger(ref) == ledger(st)
+
+
+def test_sharded_store_single_compile(mesh1):
+    """Steps after the first (sharding-committed) one reuse the compiled
+    sharded stepper."""
+    c, b, r, n_remote = 2, 2, 3, 32
+    rk = jnp.zeros((n_remote, STORE_CFG.page_tokens, STORE_CFG.kv_heads,
+                    STORE_CFG.head_dim), jnp.bfloat16)
+    st = mesh_plane.shard_replicated_state(
+        init_kv_store_replicated(STORE_CFG, c, b), mesh1)
+    steps = _store_steps(c, b, r, n_remote, n=3)
+    st, *_ = mesh_plane.step_replicated_sharded(
+        st, STORE_CFG, mesh1, rk, rk, *steps[0])
+    st, *_ = mesh_plane.step_replicated_sharded(
+        st, STORE_CFG, mesh1, rk, rk, *steps[1])
+    before = mesh_plane.sharded_store_cache_size()
+    st, *_ = mesh_plane.step_replicated_sharded(
+        st, STORE_CFG, mesh1, rk, rk, *steps[2])
+    assert mesh_plane.sharded_store_cache_size() == before
+
+
+def test_active_override_forces_nic_gate():
+    """`step_fetch_replicated(active=...)`: a C=1 state stepped with the
+    global gate forced on pays its NIC leg (what a 1-replica-per-device
+    shard of a C>1 deployment must do), and the default C=1 step does
+    not. The NIC busy clocks are the witness."""
+    c, b, r, n_remote = 1, 2, 3, 32
+    rk = jnp.zeros((n_remote, STORE_CFG.page_tokens, STORE_CFG.kv_heads,
+                    STORE_CFG.head_dim), jnp.bfloat16)
+    need, offs, wrs = _store_steps(c, b, r, n_remote, n=1)[0]
+    off_st = init_kv_store_replicated(STORE_CFG, c, b)
+    off_st, *_ = step_fetch_replicated(off_st, STORE_CFG, rk, rk, need,
+                                       offs, wrs)
+    on_st = init_kv_store_replicated(STORE_CFG, c, b)
+    on_st, *_ = step_fetch_replicated(on_st, STORE_CFG, rk, rk, need,
+                                      offs, wrs, active=True)
+    assert float(jnp.max(off_st.nic.page_busy)) == 0.0
+    assert float(jnp.max(on_st.nic.page_busy)) > 0.0
+
+
+# -------------------------------------------------------- fabric reduction
+def test_reduce_deltas_identity_and_conservation():
+    """Algebra of the fabric merge outside any mesh: with one
+    participant the merge returns `local` exactly; with two synthetic
+    participants the merged byte ledgers are base + both deltas (the
+    conservation argument); the link is never touched."""
+    cfg = fabric.FabricConfig(num_modules=3)
+    base = fabric.init_fabric(cfg)
+    la = base._replace(line_bytes=base.line_bytes + 5.0,
+                       page_busy=base.page_busy + 2.0)
+    lb = base._replace(line_bytes=base.line_bytes + 7.0,
+                       wb_bytes=base.wb_bytes + 1.0)
+
+    def merged(locals_):
+        stack = jax.tree.map(lambda *xs: jnp.stack(xs), *locals_)
+        return jax.vmap(
+            lambda loc: fabric.reduce_deltas(base, loc, "data"),
+            axis_name="data")(stack)
+
+    one = merged([la])
+    eq = jax.tree.map(lambda x, y: bool(jnp.all(x == y[0])), la, one)
+    assert all(jax.tree.leaves(eq)), "1-participant merge must be local"
+
+    two = merged([la, lb])
+    np.testing.assert_allclose(np.asarray(two.line_bytes[0]),
+                               np.asarray(base.line_bytes + 12.0))
+    np.testing.assert_allclose(np.asarray(two.page_busy[0]),
+                               np.asarray(base.page_busy + 2.0))
+    np.testing.assert_allclose(np.asarray(two.wb_bytes[0]),
+                               np.asarray(base.wb_bytes + 1.0))
+    # both participants see the same merged bank
+    eq = jax.tree.map(lambda x: bool(jnp.all(x[0] == x[1])),
+                      two._replace(link=None))
+    assert all(l for l in jax.tree.leaves(eq))
+    assert jnp.array_equal(two.link.bw[0], base.link.bw)
+
+
+# --------------------------------------------------------- mesh constructors
+def test_mesh_constructors_generalized():
+    """`launch/mesh.py` accepts explicit device counts (no 256-device
+    hard floor), routes every constructor through `build_mesh`, and
+    keeps readable errors when the host is short on devices."""
+    m = make_production_mesh(num_devices=1)
+    assert m.axis_names == ("data", "model")
+    assert m.devices.size == 1
+    m = make_data_mesh(1)
+    assert m.axis_names == ("data",) and m.devices.size == 1
+    assert make_test_mesh(shape=(1,), axes=("data",)).devices.size == 1
+    assert build_mesh((1, 1), ("data", "model")).shape == \
+        {"data": 1, "model": 1}
+    with pytest.raises(RuntimeError, match="device_count"):
+        make_test_mesh()               # (2, 2) needs 4 devices, have 1
+    with pytest.raises(RuntimeError, match="device_count"):
+        make_production_mesh()         # legacy 16x16 still validated
+    with pytest.raises(ValueError, match="disagree"):
+        build_mesh((2, 2), ("data",))
+    with pytest.raises(ValueError, match="even"):
+        make_production_mesh(num_devices=3, multi_pod=True)
+    # factorization picks (data, model) with model <= sqrt(n), capped 16
+    from repro.launch.mesh import _factor_2d
+    assert _factor_2d(256) == (16, 16)
+    assert _factor_2d(8) == (4, 2)
+    assert _factor_2d(7) == (7, 1)

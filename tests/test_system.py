@@ -8,6 +8,14 @@ smoke on a real lowered program.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+# Whole module is heavycompile: every test here compiles a real model
+# program (train step / serving stepper / lowered HLO), and those big
+# compiles can crash XLA when they run late in an already-loaded
+# process — any of them, not just the largest; they all pass in a
+# fresh interpreter. See tests/conftest.py::pytest_configure.
+pytestmark = pytest.mark.heavycompile
 
 from repro.configs import get_config
 from repro.configs.base import SMOKE_SHAPES
